@@ -1,0 +1,152 @@
+"""Shared benchmark harness.
+
+The container is offline (no HF checkpoints / lm-eval), so paper tables are
+reproduced in *mechanism* on scaled-down models trained in-container:
+
+* a reduced-config fp16 "original model" (the teacher) is pretrained on the
+  synthetic mixture until it has real structure to lose under quantization,
+* quality is measured on held-out data as (a) next-token loss and (b) top-1
+  agreement with the fp16 teacher (the stand-in for benchmark accuracy
+  deltas: a quantized model that matches the original's predictions scores
+  identically on any downstream task).
+
+Teachers are cached under artifacts/bench/ so every table reuses the same
+"original model" (as the paper does).
+"""
+from __future__ import annotations
+
+import os
+import time
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_reduced_config
+from repro.configs.base import TrainConfig
+from repro.core.qat import make_ctx
+from repro.data import MixtureIterator, SyntheticConfig, calibration_batches
+from repro.launch.steps import make_train_step
+from repro.launch.train import calibrate, make_teacher_pretrain_step
+from repro.models import forward, init_params
+from repro.optim import adamw_init
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+BENCH_ARCH = "qwen2.5-3b"
+SEQ_LEN = 64
+BATCH = 8
+TEACHER_STEPS = 400
+EVAL_BATCHES = 8
+
+
+def data_cfg(cfg, seed: int = 0, dclm_ratio: float = 0.25) -> SyntheticConfig:
+    return SyntheticConfig(vocab_size=cfg.vocab_size, seq_len=SEQ_LEN,
+                           batch_size=BATCH, dclm_ratio=dclm_ratio,
+                           seed=seed)
+
+
+def get_teacher(arch: str = BENCH_ARCH, steps: int = TEACHER_STEPS):
+    """Pretrained fp16 'original model' (cached)."""
+    cfg = get_reduced_config(arch)
+    ck = Checkpointer(os.path.join(ART, f"teacher_{arch}_{steps}"))
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+    if ck.latest_step() is not None:
+        params, _ = ck.restore(params0)
+        return cfg, params
+    dc = data_cfg(cfg)
+    it = MixtureIterator(dc)
+    opt = adamw_init(params0)
+    step_fn = make_teacher_pretrain_step(cfg)
+    params = params0
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, loss = step_fn(params, opt, b)
+    ck.save(steps, params, {})
+    return cfg, params
+
+
+def eval_quality(cfg, params, teacher, policy: str,
+                 n_batches: int = EVAL_BATCHES) -> Dict[str, float]:
+    """Held-out next-token loss + top-1 agreement with the fp16 teacher."""
+    from repro.core.distill import next_token_loss
+    ctx = make_ctx(policy) if policy != "A16-C16-W16" else \
+        make_ctx(policy, mode="off")
+    tctx = make_ctx("A16-C16-W16", mode="off")
+    dc = data_cfg(cfg, seed=777)          # held-out stream
+    it = MixtureIterator(dc, start_step=50_000_000)
+    losses, agrees, kls = [], [], []
+    fwd = jax.jit(lambda p, b: forward(cfg, p, ctx, b)[0])
+    tfwd = jax.jit(lambda p, b: forward(cfg, p, tctx, b)[0])
+    for _ in range(n_batches):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        lg = fwd(params, b)
+        tl = tfwd(teacher, b)
+        losses.append(float(next_token_loss(lg, b["labels"],
+                                            b["loss_mask"])))
+        m = b["loss_mask"] > 0
+        agrees.append(float(jnp.sum((jnp.argmax(lg, -1) ==
+                                     jnp.argmax(tl, -1)) * m) /
+                            jnp.sum(m)))
+        # KL(teacher || student): the KD objective on held-out data —
+        # far more sensitive than top-1 agreement at small scale
+        lp_s = jax.nn.log_softmax(lg.astype(jnp.float32), -1)
+        lp_t = jax.nn.log_softmax(tl.astype(jnp.float32), -1)
+        p_t = jnp.exp(lp_t)
+        kl = jnp.sum(p_t * (lp_t - lp_s), -1)
+        kls.append(float(jnp.sum(kl * m) / jnp.sum(m)))
+    return {"ntp_loss": float(np.mean(losses)),
+            "teacher_agreement": float(np.mean(agrees)),
+            "teacher_kl": float(np.mean(kls))}
+
+
+def run_silq(cfg, teacher, tcfg: TrainConfig, *, seed_data: int = 0,
+             eval_every: int = 0) -> Tuple[Dict, list, float]:
+    """Calibrate + QAT per the paper recipe. Returns (student, curve, s)."""
+    dc = data_cfg(cfg, seed=seed_data, dclm_ratio=tcfg.dclm_ratio)
+    student = jax.tree.map(jnp.copy, teacher)
+    student = calibrate(cfg, student, tcfg, dc)
+    opt = adamw_init(student)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 2))
+    it = MixtureIterator(dc, start_step=1)
+    t0 = time.perf_counter()
+    curve = []
+    for step in range(tcfg.total_steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        student, opt, m = step_fn(student, teacher, opt, b, jnp.int32(step))
+        if eval_every and (step + 1) % eval_every == 0:
+            q = eval_quality(cfg, student, teacher, tcfg.precision,
+                             n_batches=4)
+            curve.append((step + 1, q["teacher_agreement"]))
+    return student, curve, time.perf_counter() - t0
+
+
+def ptq_baselines(cfg, teacher, policy_name: str) -> Dict[str, Dict]:
+    from repro.core.precision import parse_policy
+    from repro.core.ptq.rtn import rtn_quantize
+    from repro.core.ptq.smoothquant import smoothquant_quantize
+    pol = parse_policy(policy_name)
+    dc = data_cfg(cfg)
+    cb = calibration_batches(dc, 5)
+    out = {}
+    out["RTN"] = rtn_quantize(cfg, teacher, pol, cb)
+    out["SmoothQuant"] = smoothquant_quantize(cfg, teacher, pol, cb,
+                                              alpha=0.4)
+    return out
+
+
+class Row:
+    """CSV row helper for benchmarks/run.py (name,us_per_call,derived)."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, seconds: float, derived: str):
+        self.rows.append(f"{name},{seconds * 1e6:.0f},{derived}")
+
+    def emit(self):
+        for r in self.rows:
+            print(r, flush=True)

@@ -1,0 +1,79 @@
+"""Roofline aggregation: reads artifacts/dryrun/*.json into the §Roofline
+table (per arch x shape x mesh: three terms, bottleneck, useful-FLOPs
+ratio). Also emits the markdown table pasted into EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+ART_BASELINE = ART + "_baseline"
+
+
+def load_cells(mesh: str | None = None, policy: str | None = None,
+               art_dir: str | None = None) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir or ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r["mesh"] != mesh:
+            continue
+        if policy and r["policy"] != policy:
+            continue
+        cells.append(r)
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.3g}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.3g}ms"
+    return f"{x * 1e6:.3g}us"
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | roofline frac | useful FLOPs |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(cells, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        tc, tm, tl = (rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+        dom = max(tc, tm, tl)
+        frac = tc / dom if dom > 0 else 0.0
+        ratio = rl.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(tc)} | "
+            f"{fmt_s(tm)} | {fmt_s(tl)} | {rl['bottleneck']} | "
+            f"{frac * 100:.1f}% | "
+            f"{(ratio or 0) * 100:.0f}% |")
+    return "\n".join(lines)
+
+
+def main(row=None):
+    art = ART_BASELINE if "--baseline" in sys.argv else None
+    cells = load_cells(mesh="singlepod", art_dir=art)
+    if not cells:
+        print("# roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return {}
+    print(markdown_table(cells))
+    if row is not None:
+        for r in cells:
+            rl = r["roofline"]
+            dom = max(rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+            row.add(f"roofline/{r['arch']}/{r['shape']}", dom,
+                    f"bottleneck={rl['bottleneck']},"
+                    f"frac={rl['t_compute_s'] / dom if dom else 0:.3f}")
+    return {(
+        r["arch"], r["shape"], r["mesh"]): r["roofline"] for r in cells}
+
+
+if __name__ == "__main__":
+    main()

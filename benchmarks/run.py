@@ -1,0 +1,52 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (prefixed '#' lines are
+human-readable table reproductions). Budget-bounded for CPU: each QAT run
+uses a reduced model and a few hundred steps.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1 fig3
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.common import Row
+
+
+def main() -> None:
+    from benchmarks import (fig1_acc_vs_steps, fig3_rotation, roofline,
+                            table1_ptq_vs_qat, table2_time_to_quality,
+                            table3_dataset_swap, table4_ablations)
+    suites = {
+        "table1": table1_ptq_vs_qat.main,
+        "table2": table2_time_to_quality.main,
+        "table3": table3_dataset_swap.main,
+        "table4": table4_ablations.main,
+        "fig1": fig1_acc_vs_steps.main,
+        "fig3": fig3_rotation.main,
+        "roofline": roofline.main,
+    }
+    want = sys.argv[1:] or list(suites)
+    row = Row()
+    print("name,us_per_call,derived")
+    failures = []
+    for name in want:
+        t0 = time.perf_counter()
+        try:
+            suites[name](row)
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+                  flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    row.emit()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

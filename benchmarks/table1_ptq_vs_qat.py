@@ -1,0 +1,52 @@
+"""Table 1 (mechanism reproduction): SiLQ vs PTQ baselines across precision
+configs. Expected ordering, as in the paper: SiLQ > SmoothQuant/RTN at every
+A-C-W config, approaching the fp16 baseline."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import TrainConfig
+
+from benchmarks.common import (Row, eval_quality, get_teacher, ptq_baselines,
+                               run_silq)
+
+POLICIES = ("A8d-C8-W4", "A8s-C8-W4", "A8d-C4-W4")
+QAT_STEPS = 300
+
+
+def main(row: Row | None = None, qat_steps: int = QAT_STEPS):
+    row = row or Row()
+    cfg, teacher = get_teacher()
+    base = eval_quality(cfg, teacher, teacher, "A16-C16-W16")
+    print(f"# Table1 baseline fp16: loss={base['ntp_loss']:.4f} "
+          f"agree={base['teacher_agreement']:.3f}")
+    results = {"Baseline-16-16-16": (0.0, base)}
+    for pol in POLICIES:
+        t0 = time.perf_counter()
+        for name, q in ptq_baselines(cfg, teacher, pol).items():
+            dt = time.perf_counter() - t0
+            e = eval_quality(cfg, q, teacher, pol)
+            results[f"{name}-{pol}"] = (dt, e)
+        tcfg = TrainConfig(precision=pol, total_steps=qat_steps,
+                           ref_steps=qat_steps, batch_size=8, seq_len=64)
+        t0 = time.perf_counter()
+        student, _, train_s = run_silq(cfg, teacher, tcfg)
+        e = eval_quality(cfg, student, teacher, pol)
+        results[f"SiLQ-{pol}"] = (train_s, e)
+    print(f"# {'method':28s} {'ntp_loss':>9s} {'agree%':>7s} "
+          f"{'KL(T||S)':>9s} {'time_s':>7s}")
+    for name, (dt, e) in results.items():
+        print(f"# {name:28s} {e['ntp_loss']:9.4f} "
+              f"{e['teacher_agreement'] * 100:7.2f} "
+              f"{e.get('teacher_kl', 0):9.5f} {dt:7.1f}")
+        row.add(f"table1/{name}", dt,
+                f"agree={e['teacher_agreement']:.4f};kl={e.get('teacher_kl', 0):.5f}")
+    # the paper's headline claim, as an assertion
+    for pol in POLICIES:
+        assert results[f"SiLQ-{pol}"][1]["teacher_agreement"] >= \
+            results[f"SmoothQuant-{pol}"][1]["teacher_agreement"] - 0.02, pol
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""End-to-end SiLQ QAT driver (paper §3.1), CPU-scale.
+
+Trains a ~small "original" fp16 model on the synthetic mixture, then runs
+the full SiLQ recipe — convex-MSE weight calibration, percentile activation
+calibration, LSQ step-size learning with the 50x activation-scale LR boost,
+pure-KD loss from the fp16 teacher — and reports quantized quality
+before/after QAT.
+
+    PYTHONPATH=src python examples/qat_train.py --steps 300
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core.qat import make_ctx
+from repro.data import MixtureIterator
+from repro.launch.train import run_qat
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--precision", default="A8d-C8-W4")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--teacher-steps", type=int, default=300)
+    args = ap.parse_args()
+
+    tcfg = TrainConfig(precision=args.precision, total_steps=args.steps,
+                       ref_steps=args.steps, batch_size=8, seq_len=64)
+    teacher, student, _ = run_qat(args.arch, tcfg, reduced=True,
+                                  teacher_steps=args.teacher_steps)
+
+    from benchmarks.common import eval_quality
+    from repro.configs import get_reduced_config
+    cfg = get_reduced_config(args.arch)
+    base = eval_quality(cfg, teacher, teacher, "A16-C16-W16")
+    post = eval_quality(cfg, student, teacher, args.precision)
+    print(f"\nfp16 baseline : loss={base['ntp_loss']:.4f}")
+    print(f"SiLQ {args.precision}: loss={post['ntp_loss']:.4f} "
+          f"teacher-agreement={post['teacher_agreement']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serve a quantized model with batched requests over the int8 KV cache.
+
+Demonstrates the deployment path: slot-based continuous batching, prefill +
+decode against the integer cache, plus a direct comparison of the Pallas
+w4a8 kernel vs the fake-quant training path on one layer.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.core.calibration import mse_weight_scale
+from repro.core.qat import export_linear_int, make_ctx, qlinear
+from repro.kernels.w4a8.ops import w4a8_linear
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+ARCH = "qwen2.5-3b"
+
+cfg = get_reduced_config(ARCH)
+params = init_params(cfg, jax.random.PRNGKey(0))
+
+# --- batched serving over the int8 cache ---------------------------------
+engine = ServeEngine(cfg, params, policy="A8d-C8-W4", slots=4, cache_len=96)
+rng = np.random.default_rng(0)
+for uid in range(12):
+    engine.submit(Request(uid=uid,
+                          prompt=rng.integers(0, cfg.vocab_size, 24,
+                                              ).astype(np.int32),
+                          max_new_tokens=12))
+t0 = time.perf_counter()
+stats = engine.run_until_drained()
+dt = time.perf_counter() - t0
+print(f"served 12 requests in {dt:.1f}s — {stats['tokens_out']} tokens, "
+      f"{stats['tokens_out'] / dt:.1f} tok/s over the int8 KV cache")
+
+# --- deployed w4a8 kernel vs fake-quant path ------------------------------
+lin = params["segments"][0]["0"]["attn"]["wq"]
+lin = jax.tree.map(lambda x: x[0], lin)            # unstack the scan axis
+lin = dict(lin, s_w=mse_weight_scale(lin["w"], 4))
+exported = export_linear_int(lin, 4)               # packed int4 + scales
+x = jax.random.normal(jax.random.PRNGKey(2), (16, cfg.d_model),
+                      jnp.bfloat16)
+y_kernel = w4a8_linear(x, exported)                # Pallas int4xint8 matmul
+y_fake = qlinear(make_ctx("A8d-C8-W4"), x, lin)    # training-time fake quant
+err = float(jnp.mean(jnp.abs(y_kernel.astype(jnp.float32)
+                             - y_fake.astype(jnp.float32))))
+print(f"w4a8 kernel vs fake-quant training path: mean |err| = {err:.2e} "
+      f"(expected: quantization noise floor)")

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing.
+
+Design goals (1000+-node deployments):
+* **atomic**: write to ``step_XXXX.tmp/`` then ``os.replace`` — a crashed
+  writer never corrupts the latest checkpoint; restore scans for the newest
+  *complete* step directory.
+* **mesh-elastic**: tensors are saved as host numpy (gathered), so a restart
+  may use a different mesh/device count — ``restore(..., sharding_fn)``
+  re-places each leaf under the *new* sharding (re-shard on load).
+* **complete state**: params, optimizer moments, quantizer scales (they live
+  inside params), RNG, data-iterator state, and the step counter.
+* **async**: ``save_async`` hands the (already host-transferred) arrays to a
+  writer thread so the train loop never blocks on disk.
+* **bounded**: keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- write ----------------------------------------------------------
+    def save(self, step: int, tree: Dict, extra: Optional[Dict] = None):
+        arrays = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._write(step, arrays, extra or {})
+
+    def save_async(self, step: int, tree: Dict,
+                   extra: Optional[Dict] = None):
+        self.wait()
+        arrays = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, arrays, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, arrays: Dict, extra: Dict):
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(arrays)
+        # npz cannot represent ml_dtypes (bfloat16 etc.): store such leaves
+        # as same-width uint views and record the true dtype in the manifest
+        to_save, dtypes = {}, {}
+        for k, v in flat:
+            v = np.asarray(v)
+            if v.dtype.kind not in "biufc":       # custom dtype (bf16, ...)
+                dtypes[k] = str(v.dtype)
+                v = v.view(np.dtype(f"u{v.dtype.itemsize}"))
+            to_save[k] = v
+        np.savez(os.path.join(tmp, "tensors.npz"), **to_save)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump({"step": step, "keys": [k for k, _ in flat],
+                       "dtypes": dtypes, "extra": extra}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---- read -----------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, _MANIFEST)):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Dict, step: Optional[int] = None,
+                sharding_fn: Optional[Callable[[str], Any]] = None
+                ) -> Tuple[Dict, Dict]:
+        """Restore into the structure of ``template``.
+
+        ``sharding_fn(key) -> Sharding|None`` re-places each leaf for the
+        *current* mesh (elastic restart across different topologies).
+        Returns (tree, extra).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "tensors.npz"))
+        dtypes = manifest.get("dtypes", {})
+        keys = [k for k, _ in _flatten(template)]
+        missing = [k for k in keys if k not in data]
+        if missing:
+            raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+        leaves = []
+        for k in keys:
+            arr = data[k]
+            if k in dtypes:
+                import ml_dtypes  # noqa: F401  (registers bf16 et al.)
+                arr = arr.view(np.dtype(dtypes[k]))
+            if sharding_fn is not None and (sh := sharding_fn(k)) is not None:
+                arr = jax.device_put(arr, sh)
+            leaves.append(arr)
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, leaves), \
+            manifest["extra"]

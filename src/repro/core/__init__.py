@@ -1,0 +1,13 @@
+"""SiLQ core: quantizers, calibration, precision policies, distillation."""
+from repro.core.distill import kd_loss, next_token_loss, silq_loss
+from repro.core.precision import PAPER_POLICIES, PrecisionPolicy, parse_policy
+from repro.core.qat import QuantCtx, make_ctx, qlinear, quantize_act
+from repro.core.quantizer import (dynamic_fake_quant, lsq_fake_quant, qbounds,
+                                  round_ste)
+
+__all__ = [
+    "kd_loss", "next_token_loss", "silq_loss",
+    "PAPER_POLICIES", "PrecisionPolicy", "parse_policy",
+    "QuantCtx", "make_ctx", "qlinear", "quantize_act",
+    "dynamic_fake_quant", "lsq_fake_quant", "qbounds", "round_ste",
+]

@@ -1,0 +1,179 @@
+"""Weight-rotation analysis (paper §3.4 / Fig. 3) and a QuaRot/SpinQuant-
+style rotation PTQ transform to compare against.
+
+Procrustes factorization of a weight change A -> B:
+    d_p(A,B)   = min_R ||RA - B||_F  (left)  or  min_R ||AR - B||_F (right)
+               = sqrt(||A||^2 + ||B||^2 - 2 * sum(svdvals(B A^T)))
+    non-rotational distance = min(d_p_left, d_p_right)
+    rotational distance     = d_F(A,B) - non-rotational
+both normalized by ||A||_F. SiLQ's claim: its weight changes are ~43%
+rotational vs ~90% for SpinQuant — i.e. QAT finds solutions rotation-based
+PTQ cannot.
+
+The rotation transform here is the *exactly function-preserving* residual
+rotation (R1 of SpinQuant) for RMSNorm transformers: fold norm scales into
+the adjacent linears (RMSNorm is then rotation-equivariant), then rotate
+the residual stream basis with a random orthogonal R.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTENTION_BLOCKS, ModelConfig
+from repro.models.model import segment_plan
+
+
+# --------------------------------------------------------------------------
+# Procrustes distances
+# --------------------------------------------------------------------------
+
+def procrustes_distances(A: jnp.ndarray, B: jnp.ndarray) -> Dict[str, float]:
+    """Rotational / non-rotational / total distance, normalized by ||A||."""
+    A = np.asarray(A, np.float64)
+    B = np.asarray(B, np.float64)
+    nA = np.linalg.norm(A)
+    total = np.linalg.norm(B - A)
+    sq = np.linalg.norm(A) ** 2 + np.linalg.norm(B) ** 2
+
+    def d_p(M):   # M = B A^T (left) or A^T B (right)
+        s = np.linalg.svd(M, compute_uv=False)
+        return float(np.sqrt(max(sq - 2.0 * s.sum(), 0.0)))
+
+    non_rot = min(d_p(B @ A.T), d_p(A.T @ B))
+    return {"total": float(total / nA),
+            "non_rotational": float(non_rot / nA),
+            "rotational": float(max(total - non_rot, 0.0) / nA)}
+
+
+# --------------------------------------------------------------------------
+# Function-preserving residual rotation (R1)
+# --------------------------------------------------------------------------
+
+def random_rotation(d: int, key) -> jnp.ndarray:
+    q, r = jnp.linalg.qr(jax.random.normal(key, (d, d), jnp.float32))
+    return q * jnp.sign(jnp.diagonal(r))[None, :]   # proper orthonormal
+
+
+def _fold_norm_into(norm_p: Dict, linears) -> None:
+    """W' = diag(norm_w) @ W; norm_w := 1 (RMSNorm becomes rotation-equiv)."""
+    nw = norm_p["w"].astype(jnp.float32)            # (rep, d) or (d,)
+    for lin in linears:
+        w = lin["w"].astype(jnp.float32)
+        lin["w"] = (w * nw[..., :, None]).astype(lin["w"].dtype)
+    norm_p["w"] = jnp.ones_like(norm_p["w"])
+
+
+def _rot_in(lin: Dict, R: jnp.ndarray) -> None:
+    """Reading the rotated residual: W' = R^T W (input-side)."""
+    w = lin["w"].astype(jnp.float32)
+    lin["w"] = jnp.einsum("dk,...do->...ko", R, w).astype(lin["w"].dtype)
+
+
+def _rot_out(lin: Dict, R: jnp.ndarray) -> None:
+    """Writing to the rotated residual: W' = W R (output-side)."""
+    w = lin["w"].astype(jnp.float32)
+    lin["w"] = jnp.einsum("...do,ok->...dk", w, R).astype(lin["w"].dtype)
+
+
+def rotate_residual(cfg: ModelConfig, params: Dict, key) -> Dict:
+    """Fold norms, then rotate the residual-stream basis. Only supported for
+    rms-norm attention/MoE decoder families (the paper's setting)."""
+    assert cfg.norm_type == "rms" and not cfg.is_encdec
+    params = jax.tree.map(lambda x: x, params)
+    R = random_rotation(cfg.d_model, key)
+
+    # embedding / head / final norm
+    emb = dict(params["embed"])
+    emb["w"] = (emb["w"].astype(jnp.float32) @ R).astype(emb["w"].dtype)
+    params["embed"] = emb
+    fn = dict(params["final_norm"])
+    if not cfg.tie_embeddings:
+        head = dict(params["head"])
+        _fold_norm_into(fn, [head])
+        _rot_in(head, R)
+        params["head"] = head
+    else:
+        # tied head reads embed^T: folding final norm would break the tie;
+        # keep final norm (rotation-equivariant part is exact anyway)
+        pass
+    params["final_norm"] = fn
+
+    for seg_i, (kinds, rep) in enumerate(segment_plan(cfg)):
+        seg = params["segments"][seg_i]
+        for i, kind in enumerate(kinds):
+            if kind not in ATTENTION_BLOCKS:
+                raise NotImplementedError(
+                    "residual rotation targets attention families")
+            blk = seg[str(i)]
+            attn = {k: dict(v) if isinstance(v, dict) else v
+                    for k, v in blk["attn"].items()}
+            _fold_norm_into(blk["ln1"], [attn["wq"], attn["wk"], attn["wv"]])
+            _rot_in(attn["wq"], R)
+            _rot_in(attn["wk"], R)
+            _rot_in(attn["wv"], R)
+            _rot_out(attn["wo"], R)
+            blk["attn"] = attn
+            mlp_key = "moe" if cfg.is_moe else "mlp"
+            mlp = {k: dict(v) if isinstance(v, dict) else v
+                   for k, v in blk[mlp_key].items()}
+            if cfg.is_moe:
+                _fold_norm_into(blk["ln2"], [mlp["router"]])
+                # note: norm already folded into router; expert weights get
+                # the rotation only (they share the same normed input)
+                _rot_in(mlp["router"], R)
+                for k in ("wg", "wu"):
+                    _rot_in(mlp[k], R)
+                _rot_out(mlp["wd"], R)
+            else:
+                _fold_norm_into(blk["ln2"], [mlp["wg"], mlp["wu"]])
+                _rot_in(mlp["wg"], R)
+                _rot_in(mlp["wu"], R)
+                _rot_out(mlp["wd"], R)
+            blk[mlp_key] = mlp
+    return params
+
+
+# --------------------------------------------------------------------------
+# Per-layer-type rotation report (Fig. 3)
+# --------------------------------------------------------------------------
+
+_LAYER_TYPES = ("wq", "wk", "wg", "wu", "wd")   # v/o omitted (paper §3.4)
+
+
+def rotation_report(cfg: ModelConfig, params_before: Dict,
+                    params_after: Dict) -> Dict[str, Dict[str, float]]:
+    """Average rotational / non-rotational distance by layer type."""
+    out: Dict[str, list] = {k: [] for k in _LAYER_TYPES}
+    for seg_i, (kinds, rep) in enumerate(segment_plan(cfg)):
+        for i, kind in enumerate(kinds):
+            if kind not in ATTENTION_BLOCKS:
+                continue
+            b0 = params_before["segments"][seg_i][str(i)]
+            b1 = params_after["segments"][seg_i][str(i)]
+            for group, sub in (("attn", ("wq", "wk")),
+                               ("moe" if cfg.is_moe else "mlp",
+                                ("wg", "wu", "wd"))):
+                for name in sub:
+                    if name not in b0.get(group, {}):
+                        continue
+                    w0 = np.asarray(b0[group][name]["w"], np.float32)
+                    w1 = np.asarray(b1[group][name]["w"], np.float32)
+                    for r in range(w0.shape[0]):   # per scanned layer
+                        a, b = w0[r], w1[r]
+                        if a.ndim == 3:            # MoE experts: average
+                            for e in range(a.shape[0]):
+                                out[name].append(
+                                    procrustes_distances(a[e], b[e]))
+                        else:
+                            out[name].append(procrustes_distances(a, b))
+    report = {}
+    for name, ds in out.items():
+        if not ds:
+            continue
+        report[name] = {k: float(np.mean([d[k] for d in ds]))
+                        for k in ("total", "rotational", "non_rotational")}
+    return report

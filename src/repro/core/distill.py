@@ -1,0 +1,59 @@
+"""Knowledge-distillation loss for SiLQ (paper §3.1, ablations Table 4).
+
+The teacher is the original unquantized model; the student is the quantized
+model. The paper's best configuration is *pure* KD (kd_ratio=1.0) at
+temperature 1. ``kd_ratio``/``kd_temperature`` are kept configurable for the
+Table-4 ablations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss(student_logits: jnp.ndarray, teacher_logits: jnp.ndarray,
+            temperature: float = 1.0,
+            mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Soft cross-entropy against teacher distribution at ``temperature``.
+
+    Scaled by T^2 (Hinton et al., 2015) so gradient magnitude is
+    temperature-invariant. Shapes: (..., vocab); mask broadcasts over (...).
+    """
+    t = jnp.float32(temperature)
+    sl = student_logits.astype(jnp.float32) / t
+    tl = jax.lax.stop_gradient(teacher_logits.astype(jnp.float32)) / t
+    log_p_s = jax.nn.log_softmax(sl, axis=-1)
+    p_t = jax.nn.softmax(tl, axis=-1)
+    ce = -jnp.sum(p_t * log_p_s, axis=-1) * (t * t)
+    return _masked_mean(ce, mask)
+
+
+def next_token_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Standard next-token cross entropy (labels already shifted)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return _masked_mean(logz - gold, mask)
+
+
+def silq_loss(student_logits: jnp.ndarray, teacher_logits: jnp.ndarray,
+              labels: jnp.ndarray, kd_ratio: float = 1.0,
+              kd_temperature: float = 1.0,
+              mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """kd_ratio * KD + (1 - kd_ratio) * next-token CE (paper default 1.0)."""
+    loss = 0.0
+    if kd_ratio > 0.0:
+        loss = kd_ratio * kd_loss(student_logits, teacher_logits,
+                                  kd_temperature, mask)
+    if kd_ratio < 1.0:
+        loss = loss + (1.0 - kd_ratio) * next_token_loss(
+            student_logits, labels, mask)
+    return loss
+
+
+def _masked_mean(x: jnp.ndarray, mask: jnp.ndarray | None) -> jnp.ndarray:
+    if mask is None:
+        return jnp.mean(x)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(x * m) / jnp.maximum(jnp.sum(m), 1.0)

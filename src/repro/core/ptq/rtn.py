@@ -1,0 +1,35 @@
+"""Round-to-nearest PTQ baseline: calibrate scales, no training.
+
+The weakest baseline in the paper's comparison set: per-output-channel
+weight scales (same convex-MSE calibration as SiLQ — isolating the value of
+*training* from the value of *calibration*), percentile activation scales
+from calibration data, then freeze. Produces a params tree directly usable
+by the quantized forward (identical format to a QAT checkpoint, minus the
+learning)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.core.qat import calibrate_weight_scales, make_ctx, merge_act_scales
+from repro.models import forward
+
+
+def rtn_quantize(cfg: ModelConfig, params: Dict, policy: PrecisionPolicy,
+                 calib_batches: List[Dict], *,
+                 wgt_method: str = "mse",
+                 act_method: str = "quantile") -> Dict:
+    params = calibrate_weight_scales(params, policy, wgt_method)
+    if policy.enabled and policy.acts_static and calib_batches:
+        ctx = make_ctx(policy, mode="calib", act_calib_method=act_method)
+        stats = []
+        fwd = jax.jit(lambda p, b: forward(cfg, p, ctx, b,
+                                           collect_stats=True)[1]["qstats"])
+        for b in calib_batches:
+            stats.append(fwd(params, {"tokens": jnp.asarray(b["tokens"])}))
+        params = merge_act_scales(params, stats, policy)
+    return params

@@ -1,0 +1,124 @@
+"""SmoothQuant PTQ baseline (Xiao et al., 2023), as compared in Table 1.
+
+Per-channel smoothing factors migrate activation outliers into the weights
+before round-to-nearest quantization::
+
+    s_j = max|X_j|^alpha / max|W_j|^(1-alpha)        (SiLQ App. D: alpha=0.4)
+    X' = X / s   — folded into the producing norm's scale
+    W' = W * s   — folded into the consuming linear's rows
+
+Folding sites mirror the reference implementation: attention input norm ->
+wq/wk/wv, MLP input norm -> wg/wu (or w1); for the recurrent families the
+analogous (norm -> input-projection) pairs. Per-channel activation maxima
+come from real calibration batches via the ``chan_max`` stats collector.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy
+from repro.core.ptq.rtn import rtn_quantize
+from repro.core.qat import make_ctx
+from repro.models import forward
+from repro.models.model import segment_plan
+
+
+def _get(tree, path: str):
+    for k in path.split("/"):
+        if not isinstance(tree, dict) or k not in tree:
+            return None
+        tree = tree[k]
+    return tree
+
+
+def collect_chan_maxima(cfg: ModelConfig, params: Dict,
+                        calib_batches: List[Dict]) -> Dict:
+    """Stats tree whose ``s_in`` leaves are per-channel |x| maxima."""
+    ctx = make_ctx("A8s-C8-W4", mode="calib", act_calib_method="chan_max")
+    fwd = jax.jit(lambda p, b: forward(cfg, p, ctx, b,
+                                       collect_stats=True)[1]["qstats"])
+    agg = None
+    for b in calib_batches:
+        stats = fwd(params, {"tokens": jnp.asarray(b["tokens"])})
+        agg = stats if agg is None else jax.tree.map(jnp.maximum, agg, stats)
+    return agg
+
+
+# (norm key, linear keys smoothing-folded against it) per block kind
+def _pairs_for(cfg: ModelConfig, kind: str, blk: Dict):
+    pairs = []
+    if kind in ("attn", "local_attn"):
+        pairs.append(("ln1", ["attn/wq", "attn/wk", "attn/wv"]))
+        if "mlp" in blk:
+            pairs.append(("ln2", ["mlp/w1"] if cfg.mlp_type == "gelu"
+                          else ["mlp/wg", "mlp/wu"]))
+    elif kind == "rglru":
+        pairs.append(("ln1", ["rglru/w_in", "rglru/w_gate"]))
+        pairs.append(("ln2", ["mlp/wg", "mlp/wu"]))
+    elif kind == "mlstm":
+        pairs.append(("ln1", ["cell/w_up"]))
+    elif kind == "slstm":
+        pairs.append(("ln1", ["cell/w_x"]))
+    return pairs
+
+
+def fold_smoothing(cfg: ModelConfig, params: Dict, alpha: float,
+                   calib_batches: List[Dict]) -> Dict:
+    """Returns a new params tree with smoothing folded in."""
+    params = jax.tree.map(lambda x: x, params)   # fresh containers
+    stats = collect_chan_maxima(cfg, params, calib_batches) \
+        if calib_batches else None
+
+    plan = segment_plan(cfg)
+    for seg_i, (kinds, rep) in enumerate(plan):
+        seg = params["segments"][seg_i]
+        seg_stats = (stats["segments"][seg_i] if stats else None)
+        for i, kind in enumerate(kinds):
+            blk = seg[str(i)]
+            blk_stats = seg_stats[str(i)] if seg_stats else None
+            for norm_key, lin_keys in _pairs_for(cfg, kind, blk):
+                if norm_key not in blk:
+                    continue
+                lins = [(k, _get(blk, k)) for k in lin_keys]
+                lins = [(k, l) for k, l in lins if l is not None]
+                if not lins:
+                    continue
+                nw = blk[norm_key]["w"].astype(jnp.float32)   # (rep, d)
+                # activation per-channel maxima: measured, else norm proxy
+                act_max = None
+                if blk_stats is not None:
+                    st = _get(blk_stats, lin_keys[0].split("/")[0])
+                    st = st.get(lin_keys[0].split("/")[1], {}) \
+                        if isinstance(st, dict) else {}
+                    if isinstance(st, dict) and "s_in" in st:
+                        act_max = st["s_in"].astype(jnp.float32)
+                if act_max is None:
+                    act_max = jnp.abs(nw)
+                act_max = jnp.maximum(act_max, 1e-5)
+                w_max = jnp.maximum(jnp.max(jnp.stack(
+                    [jnp.max(jnp.abs(l["w"].astype(jnp.float32)), axis=-1)
+                     for _, l in lins]), axis=0), 1e-5)       # (rep, d)
+                s = jnp.clip(act_max ** alpha / w_max ** (1.0 - alpha),
+                             1e-3, 1e3)
+                blk[norm_key] = dict(blk[norm_key])
+                blk[norm_key]["w"] = (nw / s).astype(params["embed"]["w"].dtype)
+                for k, lin in lins:
+                    parent = _get(blk, "/".join(k.split("/")[:-1]))
+                    new_lin = dict(lin)
+                    new_lin["w"] = (lin["w"].astype(jnp.float32)
+                                    * s[..., :, None]).astype(lin["w"].dtype)
+                    parent[k.split("/")[-1]] = new_lin
+    return params
+
+
+def smoothquant_quantize(cfg: ModelConfig, params: Dict,
+                         policy: PrecisionPolicy,
+                         calib_batches: List[Dict],
+                         alpha: float = 0.4) -> Dict:
+    """Full SmoothQuant pipeline: fold smoothing, then RTN quantize."""
+    params = fold_smoothing(cfg, params, alpha, calib_batches)
+    return rtn_quantize(cfg, params, policy, calib_batches)

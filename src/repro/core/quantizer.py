@@ -1,0 +1,205 @@
+"""SiLQ quantizers: STE fake-quantization and LSQ learned step sizes.
+
+Implements paper Eq. 1::
+
+    x_hat = round(clip(x / s, b_l, b_u)) * s
+
+with the straight-through estimator for the round op and LSQ (Esser et al.,
+2019) gradients for the step size ``s``. All quantization math runs in fp32
+internally (bf16's 8-bit mantissa cannot represent 16-bit quantization
+levels) and results are cast back to the input dtype.
+
+Conventions
+-----------
+* symmetric signed integers: ``b_l = -2^{p-1}``, ``b_u = 2^{p-1} - 1``
+* weights: one step size per *output* channel (last axis of ``w``)
+* static activations / cache: one learned step size per tensor site
+* dynamic activations: per-token absmax (stop-gradient through the scale)
+
+The pure-jnp functions here are the reference semantics; the Pallas kernels
+in ``repro.kernels.quant`` implement the identical fwd/bwd math for the TPU
+hot path and are validated against these in tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_EPS = 1e-9
+
+
+def qbounds(bits: int) -> Tuple[int, int]:
+    """Lower/upper integer bounds for symmetric signed quantization."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest with a straight-through gradient."""
+    return x + lax.stop_gradient(jnp.round(x) - x)
+
+
+def _reduce_to_shape(t: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Sum-reduce ``t`` down to ``shape`` (inverse of broadcasting)."""
+    if t.shape == tuple(shape):
+        return t
+    ndim_diff = t.ndim - len(shape)
+    lead = tuple(range(ndim_diff))
+    t = jnp.sum(t, axis=lead) if lead else t
+    axes = tuple(i for i, d in enumerate(shape) if d == 1 and t.shape[i] != 1)
+    if axes:
+        t = jnp.sum(t, axis=axes, keepdims=True)
+    return t.reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# LSQ fake quantization (static, learned step size)
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def lsq_fake_quant(x: jnp.ndarray, s: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quant-dequant with learned step size; LSQ gradients for ``s``.
+
+    ``s`` must be broadcastable to ``x`` (scalar for per-tensor, shape with
+    singleton non-channel dims for per-channel).
+    """
+    out, _ = _lsq_fwd(x, s, bits)
+    return out
+
+
+def _lsq_fwd(x, s, bits):
+    qn, qp = qbounds(bits)
+    xf = x.astype(jnp.float32)
+    sf = jnp.maximum(s.astype(jnp.float32), _EPS)
+    v = xf / sf
+    q = jnp.round(jnp.clip(v, qn, qp))
+    out = (q * sf).astype(x.dtype)
+    return out, (x, s)
+
+
+def _lsq_bwd(bits, res, g):
+    qn, qp = qbounds(bits)
+    x, s = res
+    gf = g.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    sf = jnp.maximum(s.astype(jnp.float32), _EPS)
+    v = xf / sf
+    within = (v >= qn) & (v <= qp)
+    dx = jnp.where(within, gf, 0.0).astype(x.dtype)
+    # d(out)/d(s): round(v) - v inside the range, clip value when clipped.
+    dq_ds = jnp.where(within, jnp.round(v) - v, jnp.clip(v, qn, qp))
+    n_per_scale = max(x.size // max(s.size, 1), 1)
+    gscale = 1.0 / jnp.sqrt(jnp.float32(n_per_scale * qp))
+    ds = _reduce_to_shape(gf * dq_ds, s.shape) * gscale
+    return dx, ds.astype(s.dtype)
+
+
+lsq_fake_quant.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+# --------------------------------------------------------------------------
+# Dynamic (per-token) fake quantization — the "d" in A8d
+# --------------------------------------------------------------------------
+
+def dynamic_fake_quant(x: jnp.ndarray, bits: int, axis: int = -1) -> jnp.ndarray:
+    """Token-wise dynamic symmetric quantization (absmax over ``axis``).
+
+    The scale is data-derived and stop-gradiented; the round op uses STE.
+    Nothing clips by construction (absmax maps to exactly ``b_u``).
+    """
+    qn, qp = qbounds(bits)
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    s = lax.stop_gradient(jnp.maximum(absmax / qp, _EPS))
+    v = xf / s
+    # absmax scaling cannot clip (|v| <= qp by construction); the clip is
+    # defensive only, so it is straight-through like the round
+    v = v + lax.stop_gradient(jnp.clip(v, qn, qp) - v)
+    return (round_ste(v) * s).astype(x.dtype)
+
+
+def dynamic_fake_quant_per_tensor(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Whole-tensor dynamic quantization (used by gradient compression)."""
+    qn, qp = qbounds(bits)
+    xf = x.astype(jnp.float32)
+    s = lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(xf)) / qp, _EPS))
+    v = jnp.clip(xf / s, qn, qp)
+    return (round_ste(v) * s).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Integer conversion for deployment (serving path / kernels)
+# --------------------------------------------------------------------------
+
+def quantize_to_int(x: jnp.ndarray, s: jnp.ndarray, bits: int,
+                    dtype=jnp.int8) -> jnp.ndarray:
+    """Real integer quantization: ``round(clip(x/s))`` as ints (no dequant)."""
+    qn, qp = qbounds(bits)
+    v = x.astype(jnp.float32) / jnp.maximum(s.astype(jnp.float32), _EPS)
+    return jnp.round(jnp.clip(v, qn, qp)).astype(dtype)
+
+
+def dequantize_int(q: jnp.ndarray, s: jnp.ndarray,
+                   dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * s.astype(jnp.float32)).astype(dtype)
+
+
+def dynamic_quantize_to_int(x: jnp.ndarray, bits: int, axis: int = -1,
+                            dtype=jnp.int8):
+    """Per-token integer quantization; returns (q, scale)."""
+    qn, qp = qbounds(bits)
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(xf), axis=axis, keepdims=True) / qp, _EPS)
+    q = jnp.round(jnp.clip(xf / s, qn, qp)).astype(dtype)
+    return q, s
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 values (int8 storage, range [-8,7]) two-per-byte on the last
+    axis. Layout: low nibble = even index, high nibble = odd index."""
+    assert q.shape[-1] % 2 == 0, "int4 packing needs an even last dim"
+    u = (q.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`; returns int8 values in [-8, 7]."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+# --------------------------------------------------------------------------
+# Site-level helpers used by the model code
+# --------------------------------------------------------------------------
+
+def weight_scale_shape(w_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Per-output-channel scale shape for a weight of ``w_shape``.
+
+    Output channel is the last axis; leading expert/layer axes keep their own
+    scales (e.g. MoE experts quantize independently).
+    """
+    return tuple(list(w_shape[:-2]) + [1] * (1 if len(w_shape) >= 2 else 0)
+                 + [w_shape[-1]]) if len(w_shape) >= 2 else (1,)
+
+
+def quantize_weight(w: jnp.ndarray, s: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """LSQ fake-quant for weights (per-output-channel step size)."""
+    return lsq_fake_quant(w, s, bits)
+
+
+def quantize_act_static(x: jnp.ndarray, s: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """LSQ fake-quant for a static per-tensor activation site."""
+    return lsq_fake_quant(x, s, bits)
+
+
+def quantize_act_dynamic(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Token-wise dynamic activation quantization (last axis = features)."""
+    return dynamic_fake_quant(x, bits, axis=-1)

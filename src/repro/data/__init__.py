@@ -1,0 +1,6 @@
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import (MixtureIterator, SyntheticConfig,
+                                  calibration_batches)
+
+__all__ = ["ShardedLoader", "MixtureIterator", "SyntheticConfig",
+           "calibration_batches"]

@@ -1,0 +1,42 @@
+"""Host-side data loading: device placement, sharding, prefetch.
+
+``ShardedLoader`` wraps an iterator of numpy batches, places each batch on
+the mesh with the batch axis over ("pod", "data") and prefetches one batch
+ahead (overlapping host generation with device compute).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ShardedLoader:
+    def __init__(self, it: Iterator[Dict[str, np.ndarray]],
+                 mesh: Optional[Mesh] = None,
+                 batch_axes: tuple = ("data",), prefetch: int = 1):
+        self._it = it
+        self._mesh = mesh
+        self._spec = P(batch_axes)
+        self._q: collections.deque = collections.deque()
+        self._prefetch = max(prefetch, 0)
+        self._lock = threading.Lock()
+
+    def _place(self, batch: Dict[str, np.ndarray]):
+        if self._mesh is None:
+            return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        sh = NamedSharding(self._mesh, self._spec)
+        return {k: jax.device_put(v, sh) for k, v in batch.items()}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        with self._lock:
+            while len(self._q) <= self._prefetch:
+                self._q.append(self._place(next(self._it)))
+            return self._q.popleft()

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: flash-attention forward (training / prefill).
+
+The §Roofline analysis shows the memory term of every train/prefill cell is
+dominated by S^2 attention-score traffic at XLA fusion boundaries. This
+kernel keeps the score/probability tile in VMEM: HBM traffic drops from
+O(S^2) to O(S * D) per head — the structural fix identified in
+EXPERIMENTS.md §Perf.
+
+Grid (B, H, nq, nk), nk innermost with online-softmax state in VMEM
+scratch. Tiles: TQ=256 q rows x TK=512 cache tokens x full head_dim (lane
+dim, multiple of 128). Causal tiles above the diagonal are masked (the
+kernel still visits them — Mosaic grid pruning is a follow-up; masked tiles
+cost compute but no extra HBM).
+
+GQA maps query head h to kv head h // (H // Hkv) in the index maps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+import jax.numpy as jnp
+
+TQ, TK = 256, 512
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            nk: int, scale: float, causal: bool, window: int,
+            s_q: int, s_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (TQ, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (TK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (TQ, TK)
+    qpos = qi * TQ + jax.lax.broadcasted_iota(jnp.int32, (TQ, TK), 0)
+    kpos = ki * TK + jax.lax.broadcasted_iota(jnp.int32, (TQ, TK), 1)
+    mask = (qpos < s_q) & (kpos < s_kv)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, _NEG)
+    m_prev = m_ref[...]                                    # (TQ, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)                         # (TQ, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(jnp.bfloat16),
+                             v_ref[0, :, 0, :],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-20)
+                             ).astype(o_ref.dtype)
+
+
+def flash_attn_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                   s_q: int = 0, s_kv: int = 0, interpret: bool = True):
+    """q (B,Sq,H,D); k/v (B,Skv,Hkv,D), dims tile-padded by ops.py.
+
+    ``s_q``/``s_kv``: true (unpadded) lengths for masking."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    nq, nk = Sq // TQ, Skv // TK
+    kv_ix = lambda b, h, qi, ki: (b, ki, h // group, 0)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk, scale=D ** -0.5, causal=causal,
+                          window=window, s_q=s_q or Sq, s_kv=s_kv or Skv),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, TQ, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, TK, 1, D), kv_ix),
+            pl.BlockSpec((1, TK, 1, D), kv_ix),
+        ],
+        out_specs=pl.BlockSpec((1, TQ, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((TQ, 1), jnp.float32),
+            pltpu.VMEM((TQ, 1), jnp.float32),
+            pltpu.VMEM((TQ, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,26 @@
+"""jit'd wrapper for the flash-attention forward kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import kernel as K
+from repro.kernels.flash_attn.ref import flash_attn_ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_pallas: bool = True) -> jnp.ndarray:
+    """Drop-in (B,S,H,D)x(B,Skv,Hkv,D) attention; pads to tile multiples."""
+    if not use_pallas:
+        return flash_attn_ref(q, k, v, causal=causal, window=window)
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    pq, pk = (-Sq) % K.TQ, (-Skv) % K.TK
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    out = K.flash_attn_fwd(qp, kp, vp, causal=causal, window=window,
+                           s_q=Sq, s_kv=Skv, interpret=_INTERPRET)
+    return out[:, :Sq]

@@ -1,0 +1,29 @@
+"""Oracle for the flash-attention forward kernel: dense attention with
+GQA, causal and sliding-window masking (fp32 softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attn_ref(q, k, v, *, causal: bool = True,
+                   window: int = 0) -> jnp.ndarray:
+    """q (B,S,H,D); k/v (B,Skv,Hkv,D) -> (B,S,H,D) in q.dtype."""
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kr = jnp.repeat(k, g, 2).astype(jnp.float32)
+    vr = jnp.repeat(v, g, 2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr) / \
+        jnp.sqrt(jnp.float32(D))
+    iq = jnp.arange(S)[:, None]
+    ik = jnp.arange(Skv)[None, :]
+    m = jnp.ones((S, Skv), bool)
+    if causal:
+        m &= iq >= ik
+    if window:
+        m &= iq - ik < window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(m[None, None], p, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr).astype(q.dtype)

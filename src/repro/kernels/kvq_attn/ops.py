@@ -1,0 +1,33 @@
+"""jit'd wrapper for the quantized-KV flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kvq_attn import kernel as K
+from repro.kernels.kvq_attn.ref import kvq_decode_attn_ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths,
+                    use_pallas: bool = True) -> jnp.ndarray:
+    """Decode attention over an integer cache; pads S to tile multiples.
+
+    q (B,H,D); k_q/v_q (B,Hkv,S,D) int8; s_k/s_v (B,Hkv,S) fp32;
+    lengths (B,) int32.
+    """
+    if not use_pallas:
+        return kvq_decode_attn_ref(q, k_q, v_q, s_k, s_v, lengths)
+    S = k_q.shape[2]
+    pad = (-S) % K.BS
+    if pad:
+        padkv = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k_q = jnp.pad(k_q, padkv)
+        v_q = jnp.pad(v_q, padkv)
+        pads = ((0, 0), (0, 0), (0, pad))
+        s_k = jnp.pad(s_k, pads)
+        s_v = jnp.pad(s_v, pads)
+    return K.kvq_decode_attn(q, k_q, v_q, s_k.astype(jnp.float32),
+                             s_v.astype(jnp.float32),
+                             lengths.astype(jnp.int32), interpret=_INTERPRET)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for quantized-KV-cache decode attention.
+
+One new query token per sequence attends over an integer-quantized cache.
+
+Shapes:
+    q:   (B, H, D)      bf16/fp32 (already int16-fake-quantized upstream)
+    k_q: (B, Hkv, S, D) int8 (int4 values also stored int8, range [-8, 7])
+    v_q: (B, Hkv, S, D) int8
+    s_k, s_v: (B, Hkv, S) fp32 per-token cache scales
+    lengths: (B,) int32 valid prefix of the cache
+Returns (B, H, D) in q.dtype.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kvq_decode_attn_ref(q, k_q, v_q, s_k, s_v, lengths):
+    B, H, D = q.shape
+    Hkv, S = k_q.shape[1], k_q.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    k = k_q.astype(jnp.float32) * s_k[..., None].astype(jnp.float32)
+    v = v_q.astype(jnp.float32) * s_v[..., None].astype(jnp.float32)
+    scores = jnp.einsum("bngd,bnsd->bngs", qf, k) / jnp.sqrt(jnp.float32(D))
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p * mask
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bngs,bnsd->bngd", p, v)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: fused LSQ fake-quantization, forward + backward.
+
+The QAT hot-spot: every linear quantizes its input (per-tensor scale) and its
+weight (per-output-channel scale) each step. The fused kernel performs
+scale / clip / round / rescale in one VMEM pass (vs 4+ HLO ops and 2 extra
+HBM round-trips when unfused), and the backward kernel fuses the STE data
+gradient with the per-tile partial reduction of the LSQ step-size gradient.
+
+Layout: 2-D (rows, cols) view, tiles (TR, TC) = (256, 512) fp32 -> 512 KiB
+per operand buffer, lane dim a multiple of 128 for VREG alignment. Inputs
+are padded to tile multiples by ops.py (g padded with zeros so padding
+contributes nothing to the ds reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+import jax.numpy as jnp
+
+from repro.core.quantizer import qbounds
+
+TILE_R = 256
+TILE_C = 512
+
+_EPS = 1e-9
+
+
+def _fwd_kernel(x_ref, s_ref, o_ref, *, qn, qp, per_channel):
+    x = x_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)          # (1, TC) or (1, 1)
+    s = jnp.maximum(s, _EPS)
+    q = jnp.round(jnp.clip(x / s, qn, qp))
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+def _bwd_kernel(x_ref, s_ref, g_ref, dx_ref, dsp_ref, *, qn, qp, per_channel):
+    x = x_ref[...].astype(jnp.float32)
+    s = jnp.maximum(s_ref[...].astype(jnp.float32), _EPS)
+    g = g_ref[...].astype(jnp.float32)
+    v = x / s
+    within = (v >= qn) & (v <= qp)
+    dx_ref[...] = jnp.where(within, g, 0.0).astype(dx_ref.dtype)
+    dq_ds = jnp.where(within, jnp.round(v) - v, jnp.clip(v, qn, qp))
+    contrib = g * dq_ds
+    if per_channel:
+        # partial per-channel sums: one row per row-tile
+        dsp_ref[...] = jnp.sum(contrib, axis=0, keepdims=True)
+    else:
+        dsp_ref[0, 0] = jnp.sum(contrib)
+
+
+def fake_quant_fwd(x: jnp.ndarray, s: jnp.ndarray, bits: int,
+                   interpret: bool = True) -> jnp.ndarray:
+    """x: (R, C) tile-padded; s: (1, 1) or (1, C)."""
+    qn, qp = qbounds(bits)
+    R, C = x.shape
+    per_channel = s.shape[-1] == C
+    grid = (R // TILE_R, C // TILE_C)
+    s_spec = (pl.BlockSpec((1, TILE_C), lambda i, j: (0, j)) if per_channel
+              else pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, qn=qn, qp=qp, per_channel=per_channel),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)), s_spec],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, s)
+
+
+def fake_quant_bwd(x: jnp.ndarray, s: jnp.ndarray, g: jnp.ndarray, bits: int,
+                   interpret: bool = True):
+    """Returns (dx, ds_partials). ds_partials: (R/TR, C) per-channel or
+    (R/TR, C/TC) per-tensor; caller reduces + applies the LSQ grad scale."""
+    qn, qp = qbounds(bits)
+    R, C = x.shape
+    per_channel = s.shape[-1] == C
+    nr, nc = R // TILE_R, C // TILE_C
+    s_spec = (pl.BlockSpec((1, TILE_C), lambda i, j: (0, j)) if per_channel
+              else pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
+    dsp_shape = (nr, C) if per_channel else (nr, nc)
+    dsp_spec = (pl.BlockSpec((1, TILE_C), lambda i, j: (i, j)) if per_channel
+                else pl.BlockSpec((1, 1), lambda i, j: (i, j)))
+    dx, dsp = pl.pallas_call(
+        functools.partial(_bwd_kernel, qn=qn, qp=qp, per_channel=per_channel),
+        grid=(nr, nc),
+        in_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)), s_spec,
+                  pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)),
+                   dsp_spec],
+        out_shape=[jax.ShapeDtypeStruct((R, C), x.dtype),
+                   jax.ShapeDtypeStruct(dsp_shape, jnp.float32)],
+        interpret=interpret,
+    )(x, s, g)
+    return dx, dsp

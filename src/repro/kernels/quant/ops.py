@@ -1,0 +1,76 @@
+"""jit'd wrapper for the fused LSQ fake-quant Pallas kernel.
+
+``pallas_lsq_fake_quant(x, s, bits)`` is a drop-in replacement for
+``repro.core.quantizer.lsq_fake_quant`` (same custom_vjp contract, same LSQ
+gradient-scale). Arbitrary-rank inputs are viewed as 2-D (rows, cols) with
+the channel axis last; inputs are padded to tile multiples (g zero-padded so
+padding cannot contribute to the step-size reduction).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import kernel as K
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad2(a, tr, tc):
+    r, c = a.shape
+    pr, pc = (-r) % tr, (-c) % tc
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
+def _as2d(x: jnp.ndarray):
+    """(..., C) -> (R, C)."""
+    c = x.shape[-1] if x.ndim else 1
+    return x.reshape(-1, c) if x.ndim >= 1 else x.reshape(1, 1)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def pallas_lsq_fake_quant(x: jnp.ndarray, s: jnp.ndarray, bits: int):
+    out, _ = _fq_fwd(x, s, bits)
+    return out
+
+
+def _fq_fwd(x, s, bits):
+    x2 = _as2d(x)
+    per_channel = s.size == x.shape[-1] and s.size > 1
+    s2 = s.reshape(1, -1) if per_channel else s.reshape(1, 1)
+    R, C = x2.shape
+    xp = _pad2(x2, K.TILE_R, K.TILE_C)
+    sp = _pad2(s2, 1, K.TILE_C) if per_channel else s2
+    # padded scale entries must stay positive (kernel clamps at eps anyway)
+    out = K.fake_quant_fwd(xp, sp, bits, interpret=_INTERPRET)
+    out = out[:R, :C].reshape(x.shape)
+    return out, (x, s)
+
+
+def _fq_bwd(bits, res, g):
+    x, s = res
+    x2, g2 = _as2d(x), _as2d(g)
+    per_channel = s.size == x.shape[-1] and s.size > 1
+    s2 = s.reshape(1, -1) if per_channel else s.reshape(1, 1)
+    R, C = x2.shape
+    xp = _pad2(x2, K.TILE_R, K.TILE_C)
+    gp = _pad2(g2, K.TILE_R, K.TILE_C)   # zero pad -> no ds contribution
+    sp = _pad2(s2, 1, K.TILE_C) if per_channel else s2
+    dx, dsp = K.fake_quant_bwd(xp, sp, gp, bits, interpret=_INTERPRET)
+    dx = dx[:R, :C].reshape(x.shape)
+    from repro.core.quantizer import qbounds
+    _, qp = qbounds(bits)
+    n_per_scale = max(x.size // max(s.size, 1), 1)
+    gscale = 1.0 / jnp.sqrt(jnp.float32(n_per_scale * qp))
+    if per_channel:
+        ds = jnp.sum(dsp, axis=0)[:C].reshape(s.shape) * gscale
+    else:
+        ds = (jnp.sum(dsp) * gscale).reshape(s.shape)
+    return dx, ds.astype(s.dtype)
+
+
+pallas_lsq_fake_quant.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused LSQ fake-quant kernel.
+
+Operates on 2-D (rows, cols) views; scale is either scalar-like (1, 1)
+(per-tensor) or (1, cols) (per-output-channel). Matches
+``repro.core.quantizer`` semantics exactly (fp32 internal math).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.quantizer import qbounds
+
+_EPS = 1e-9
+
+
+def fake_quant_fwd_ref(x: jnp.ndarray, s: jnp.ndarray,
+                       bits: int) -> jnp.ndarray:
+    qn, qp = qbounds(bits)
+    xf = x.astype(jnp.float32)
+    sf = jnp.maximum(s.astype(jnp.float32), _EPS)
+    q = jnp.round(jnp.clip(xf / sf, qn, qp))
+    return (q * sf).astype(x.dtype)
+
+
+def fake_quant_bwd_ref(x: jnp.ndarray, s: jnp.ndarray, g: jnp.ndarray,
+                       bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (dx, ds) where ds is reduced to s.shape, WITHOUT the LSQ
+    1/sqrt(N*Qp) gradient scale (applied by the wrapper)."""
+    qn, qp = qbounds(bits)
+    xf = x.astype(jnp.float32)
+    sf = jnp.maximum(s.astype(jnp.float32), _EPS)
+    gf = g.astype(jnp.float32)
+    v = xf / sf
+    within = (v >= qn) & (v <= qp)
+    dx = jnp.where(within, gf, 0.0).astype(x.dtype)
+    dq_ds = jnp.where(within, jnp.round(v) - v, jnp.clip(v, qn, qp))
+    contrib = gf * dq_ds
+    if s.size == 1:
+        ds = jnp.sum(contrib).reshape(s.shape)
+    else:  # per-channel over the last axis
+        ds = jnp.sum(contrib, axis=0, keepdims=True).reshape(s.shape)
+    return dx, ds.astype(jnp.float32)

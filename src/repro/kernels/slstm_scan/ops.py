@@ -1,0 +1,26 @@
+"""jit'd wrapper for the sLSTM linear-scan kernel (pads B/T to tiles)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.slstm_scan import kernel as K
+from repro.kernels.slstm_scan.ref import slstm_scan_ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def slstm_scan(gx, r_h, h0, c0, use_pallas: bool = True):
+    """gx (B,T,4d); r_h (d,4d); h0/c0 (B,d). Returns (hs, hT, cT)."""
+    if not use_pallas:
+        return slstm_scan_ref(gx, r_h, h0, c0)
+    B, T, d4 = gx.shape
+    pb, pt = (-B) % K.BB, (-T) % K.BT
+    if pb or pt:
+        gx = jnp.pad(gx, ((0, pb), (0, pt), (0, 0)))
+        h0 = jnp.pad(h0, ((0, pb), (0, 0)))
+        c0 = jnp.pad(c0, ((0, pb), (0, 0)))
+    hs, hT, cT = K.slstm_scan(gx, r_h, h0.astype(jnp.float32),
+                              c0.astype(jnp.float32), t_true=T,
+                              interpret=_INTERPRET)
+    return hs[:B, :T], hT[:B], cT[:B]

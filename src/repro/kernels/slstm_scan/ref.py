@@ -1,0 +1,27 @@
+"""Oracle for the sLSTM linear-scan kernel: sequential recurrence in fp32.
+
+h_t = sigma(o) * tanh(c_t);  c_t = sigma(f) * c_{t-1} + sigma(i) * tanh(z)
+with gates (i, f, z, o) = gx_t + h_{t-1} @ r_h.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan_ref(gx, r_h, h0, c0):
+    """gx (B,T,4d); r_h (d,4d); h0/c0 (B,d) -> (hs (B,T,d), hT, cT)."""
+    d = h0.shape[-1]
+
+    def step(carry, gx_t):
+        h, c = carry
+        g = gx_t.astype(jnp.float32) + h @ r_h.astype(jnp.float32)
+        i, f, z, o = jnp.split(g, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (hT, cT), hs = jax.lax.scan(
+        step, (h0.astype(jnp.float32), c0.astype(jnp.float32)),
+        jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(gx.dtype), hT, cT

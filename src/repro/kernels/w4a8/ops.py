@@ -1,0 +1,53 @@
+"""jit'd wrapper for the w4a8 matmul kernel: the deployed quantized linear.
+
+``w4a8_linear(x, exported)`` takes bf16 activations, quantizes them per-token
+to int8 on the fly (token-dynamic A8d deployment), and runs the packed-int4
+matmul. ``exported`` is the dict from ``repro.core.qat.export_linear_int``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import dynamic_quantize_to_int
+from repro.kernels.w4a8 import kernel as K
+from repro.kernels.w4a8.ref import w4a8_matmul_ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(a, mults):
+    pads = [(0, (-d) % m) for d, m in zip(a.shape, mults)]
+    return jnp.pad(a, pads) if any(p for _, p in pads) else a
+
+
+def w4a8_matmul(x_q, w_packed, s_x, s_w, bias=None, out_dtype=jnp.bfloat16,
+                use_pallas: bool = True):
+    """Tile-padding wrapper. x_q (M,K) int8, w_packed (N,K/2) uint8,
+    s_x (M,1), s_w (N,)."""
+    M, Kdim = x_q.shape
+    N = w_packed.shape[0]
+    if not use_pallas:
+        return w4a8_matmul_ref(x_q, w_packed, s_x, s_w, bias, out_dtype)
+    xp = _pad_to(x_q, (K.BM, K.BK))
+    wp = _pad_to(w_packed, (K.BN, K.BK // 2))
+    sxp = _pad_to(s_x.reshape(M, 1).astype(jnp.float32), (K.BM, 1))
+    swp = _pad_to(s_w.reshape(1, N).astype(jnp.float32), (1, K.BN))
+    bp = None
+    if bias is not None:
+        bp = _pad_to(bias.reshape(1, N).astype(jnp.float32), (1, K.BN))
+    out = K.w4a8_matmul(xp, wp, sxp, swp, bp, out_dtype=out_dtype,
+                        interpret=_INTERPRET)
+    return out[:M, :N]
+
+
+def w4a8_linear(x: jnp.ndarray, exported: dict,
+                out_dtype=jnp.bfloat16, use_pallas: bool = True) -> jnp.ndarray:
+    """Deployed quantized linear over arbitrary leading dims."""
+    assert exported.get("packed", True), "w4a8_linear needs packed int4 weights"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_q, s_x = dynamic_quantize_to_int(x2, 8, axis=-1)
+    y = w4a8_matmul(x_q, exported["wq"], s_x, exported["s_w"].reshape(-1),
+                    exported.get("b"), out_dtype, use_pallas)
+    return y.reshape(*lead, -1)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the w4a8 integer matmul kernel.
+
+y = (x_q int8 @ w_q int4^T) * s_x * s_w (+ b)
+
+``w_packed``: (N, K/2) uint8, two int4 per byte along K (see
+``repro.core.quantizer.pack_int4``). ``s_x``: (M, 1) per-token fp32.
+``s_w``: (N,) per-output-channel fp32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quantizer import unpack_int4
+
+
+def w4a8_matmul_ref(x_q: jnp.ndarray, w_packed: jnp.ndarray,
+                    s_x: jnp.ndarray, s_w: jnp.ndarray,
+                    bias: jnp.ndarray | None = None,
+                    out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    w_q = unpack_int4(w_packed)                       # (N, K) int8 in [-8, 7]
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.T.astype(jnp.int32))  # (M, N)
+    y = acc.astype(jnp.float32) * s_x.astype(jnp.float32) \
+        * s_w.astype(jnp.float32)[None, :]
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :]
+    return y.astype(out_dtype)

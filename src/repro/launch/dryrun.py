@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step for train
+shapes, prefill_step / serve_step for inference shapes) against
+ShapeDtypeStruct inputs on the production mesh, compiles it (SPMD
+partitioning for 256 or 512 devices), and records:
+
+* memory_analysis()    — per-device bytes (proves the cell fits HBM)
+* cost_analysis()      — FLOPs / bytes for the roofline terms
+* collective traffic   — loop-aware HLO parse (repro.runtime.hlo_analysis)
+* MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) bookkeeping
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json and feed
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, arch_shape_cells, get_config, get_shape
+from repro.configs.base import TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.runtime.hlo_analysis import analyze_program
+from repro.runtime.sharding import (batch_shardings, cache_shardings,
+                                    opt_shardings, param_shardings)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+
+def cell_name(arch: str, shape: str, mesh: str, policy: str) -> str:
+    return f"{arch}__{shape}__{mesh}__{policy}"
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               policy: str = "A8d-C8-W4", tcfg: TrainConfig | None = None,
+               remat: str = "none"):
+    """Build shardings + lower + compile one cell. Returns (compiled, meta)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind, args = input_specs(arch, shape_name, policy)
+    tcfg = tcfg or TrainConfig(precision=policy, batch_size=shape.global_batch,
+                               seq_len=shape.seq_len, remat=remat)
+
+    from repro.launch.steps import attn_shard_mode_for
+    from repro.runtime.sharding import batch_axes as mesh_batch_axes
+    asm = attn_shard_mode_for(cfg, mesh.shape["model"])
+    baxes = mesh_batch_axes(mesh)
+    with mesh:
+        if kind == "train":
+            params_s, teacher_s, opt_s, batch_s, step_s = args
+            psh = param_shardings(cfg, mesh, params_s)
+            in_sh = (psh, psh, opt_shardings(psh, opt_s),
+                     batch_shardings(mesh, batch_s), None)
+            fn = make_train_step(cfg, tcfg, attn_shard_mode=asm,
+                                 batch_axes=baxes)
+        elif kind == "prefill":
+            params_s, batch_s = args
+            psh = param_shardings(cfg, mesh, params_s)
+            in_sh = (psh, batch_shardings(mesh, batch_s))
+            fn = make_prefill_step(cfg, policy, cache_budget=shape.seq_len,
+                                   attn_shard_mode=asm, batch_axes=baxes)
+        else:  # decode
+            params_s, tok_s, cache_s = args
+            psh = param_shardings(cfg, mesh, params_s)
+            csh = cache_shardings(cfg, mesh, cache_s)
+            in_sh = (psh, batch_shardings(mesh, {"tokens": tok_s})["tokens"],
+                     csh)
+            fn = make_serve_step(cfg, policy, attn_shard_mode=asm,
+                                 batch_axes=baxes)
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    meta = {"kind": kind, "lower_s": t1 - t0, "compile_s": t2 - t1,
+            "devices": int(np.prod(list(mesh.shape.values())))}
+    return compiled, meta, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             policy: str = "A8d-C8-W4", save: bool = True,
+             remat: str = "none") -> dict:
+    mesh_name = "multipod" if multi_pod else "singlepod"
+    compiled, meta, cfg, shape = lower_cell(arch, shape_name,
+                                            multi_pod=multi_pod,
+                                            policy=policy, remat=remat)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    prog = analyze_program(hlo)                    # loop-aware HLO analysis
+    coll = prog["collectives"]
+    chips = meta["devices"]
+
+    # cost_analysis() counts while bodies ONCE (loop-unaware), so FLOPs and
+    # bytes come from the loop-aware HLO parse; cost_analysis kept for ref.
+    flops = prog["flops"]                          # per-device program FLOPs
+    bytes_acc = prog["hbm_bytes"]
+    coll_bytes = coll["total_bytes"]               # per-device program bytes
+
+    # roofline terms (seconds; per-chip program -> already per-chip)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+
+    pc = cfg.param_counts()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        # student fwd+bwd (6ND) + teacher fwd (2ND), per chip
+        model_flops = (6 * pc["active"] + 2 * pc["active"]) * tokens / chips
+    else:
+        model_flops = 2 * pc["active"] * tokens / chips
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "policy": policy, "kind": meta["kind"], "chips": chips,
+        "lower_s": round(meta["lower_s"], 2),
+        "compile_s": round(meta["compile_s"], 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {"flops": flops, "bytes_accessed": bytes_acc,
+                 "xla_cost_flops": float(cost.get("flops", 0.0)),
+                 "xla_cost_bytes": float(cost.get("bytes accessed", 0.0))},
+        "collectives": {"total_bytes": coll_bytes, "by_op": coll["by_op"],
+                        "unresolved_loops": prog["unresolved_loops"],
+                        "top_sites": coll["per_site"][:8]},
+        "roofline": {
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "bottleneck": max(
+                [("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)], key=lambda kv: kv[1])[0],
+            "model_flops_per_chip": model_flops,
+            "useful_flops_ratio": (model_flops / flops) if flops else None,
+        },
+    }
+    if save:
+        os.makedirs(ART_DIR, exist_ok=True)
+        out = os.path.join(ART_DIR,
+                           cell_name(arch, shape_name, mesh_name, policy)
+                           + ".json")
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--policy", default="A8d-C8-W4")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in arch_shape_cells():
+            print(f"{a} {s}")
+        return
+
+    cells = arch_shape_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+            try:
+                r = run_cell(arch, shape, multi_pod=mp, policy=args.policy)
+                rl = r["roofline"]
+                print(f"OK   {tag}: compile={r['compile_s']}s "
+                      f"flops/chip={r['cost']['flops']:.3g} "
+                      f"bottleneck={rl['bottleneck']} "
+                      f"t=({rl['t_compute_s']:.4g},{rl['t_memory_s']:.4g},"
+                      f"{rl['t_collective_s']:.4g})s", flush=True)
+            except Exception as e:
+                failures.append(tag)
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:\n" + "\n".join(failures))
+        raise SystemExit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

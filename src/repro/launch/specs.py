@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape_name, policy)`` returns the exact pytrees the
+step function for that (arch x shape) cell is lowered with:
+
+* train_4k     -> (params, teacher_params, opt_state, batch, step)
+* prefill_32k  -> (params, batch)
+* decode_32k / long_500k -> (params, tokens1, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.qat import make_ctx
+from repro.models import init_cache, init_params
+from repro.optim import adamw_init
+
+DECODE_MARGIN = 128   # extra cache capacity beyond the prefilled context
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def param_struct(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def opt_struct(params_struct: Any) -> Any:
+    return jax.eval_shape(adamw_init, params_struct)
+
+
+def cache_struct(cfg: ModelConfig, policy: str, batch: int,
+                 cache_len: int) -> Any:
+    ctx = make_ctx(policy)
+    return jax.eval_shape(partial(init_cache, cfg, ctx, batch, cache_len))
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 with_labels: bool) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    s_text = S
+    if cfg.family == "vlm":
+        s_text = S - cfg.vision_tokens
+        out["patches"] = sds((B, cfg.vision_tokens, cfg.d_model),
+                             jnp.bfloat16)
+        out["positions"] = sds((3, B, S), jnp.int32)
+    if cfg.is_encdec:
+        out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    out["tokens"] = sds((B, s_text), jnp.int32)
+    if with_labels:
+        out["labels"] = sds((B, s_text), jnp.int32)
+        out["loss_mask"] = sds((B, s_text), jnp.float32)
+    return out
+
+
+def input_specs(arch: str, shape_name: str,
+                policy: str = "A8d-C8-W4") -> Tuple[str, Tuple]:
+    """Returns (step_kind, args_structs) for the cell."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    params = param_struct(cfg)
+    if shape.kind == "train":
+        return "train", (params, params, opt_struct(params),
+                         batch_struct(cfg, shape, with_labels=True),
+                         sds((), jnp.int32))
+    if shape.kind == "prefill":
+        return "prefill", (params, batch_struct(cfg, shape,
+                                                with_labels=False))
+    # decode: one new token against a prefilled cache of seq_len
+    B = shape.global_batch
+    cache = cache_struct(cfg, policy, B, shape.seq_len + DECODE_MARGIN)
+    return "decode", (params, sds((B, 1), jnp.int32), cache)

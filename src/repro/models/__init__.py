@@ -1,0 +1,6 @@
+"""Pure-JAX functional model zoo with SiLQ quantization sites."""
+from repro.models.model import (decode_step, forward, head_logits, init_cache,
+                                init_params, prefill, segment_plan)
+
+__all__ = ["decode_step", "forward", "head_logits", "init_cache",
+           "init_params", "prefill", "segment_plan"]

@@ -1,0 +1,339 @@
+"""Transformer block family: GQA attention (global / sliding-window / cross),
+dense SwiGLU / GELU MLP, and GShard-style top-k MoE — all with SiLQ
+quantization sites attached per paper Fig. 2:
+
+* every linear: input A-bits (``s_in``), weight W-bits per-out-channel (``s_w``)
+* query into QK^T: 16-bit (``s_q``)
+* K/V written to cache: C-bits (``s_k``/``s_v``)
+* softmax output: unquantized during training (flash-attention policy)
+* MoE router: 8-bit weight/act (accuracy-critical, tiny)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qat import (QuantCtx, init_linear, qlinear, quantize_act,
+                            quantize_weight_p)
+from repro.core.quantizer import dynamic_quantize_to_int, quantize_to_int
+from repro.models.common import (apply_rope, blockwise_attention,
+                                 decode_attention_intcache, head_rms_norm,
+                                 init_norm, norm, subcol)
+
+MOE_CAPACITY_FACTOR = 1.25
+MOE_CHUNK_S = 1024      # sequence-chunk for the dispatch working set
+
+
+# ==========================================================================
+# Dense MLPs
+# ==========================================================================
+
+def init_mlp(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {"wg": init_linear(ks[0], d, f, dtype=dtype),
+                "wu": init_linear(ks[1], d, f, dtype=dtype),
+                "wd": init_linear(ks[2], f, d, dtype=dtype)}
+    return {"w1": init_linear(ks[0], d, f, bias=True, dtype=dtype),
+            "w2": init_linear(ks[1], f, d, bias=True, dtype=dtype)}
+
+
+def mlp_fwd(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
+            col: Optional[Dict] = None) -> jnp.ndarray:
+    if cfg.mlp_type == "swiglu":
+        g = qlinear(ctx, x, p["wg"], subcol(col, "wg"))
+        u = qlinear(ctx, x, p["wu"], subcol(col, "wu"))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return qlinear(ctx, h, p["wd"], subcol(col, "wd"))
+    h = qlinear(ctx, x, p["w1"], subcol(col, "w1"))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return qlinear(ctx, h, p["w2"], subcol(col, "w2"))
+
+
+# ==========================================================================
+# Mixture of Experts (GShard capacity dispatch, chunked over tokens)
+# ==========================================================================
+
+def init_moe(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+
+    def expert_w(k, din, dout):
+        w = (jax.random.normal(k, (e, din, dout), jnp.float32)
+             * din ** -0.5).astype(dtype)
+        return {"w": w, "s_w": jnp.ones((e, 1, dout), jnp.float32),
+                "s_in": jnp.float32(1.0)}
+
+    return {"router": init_linear(ks[0], d, e, dtype=dtype),
+            "wg": expert_w(ks[1], d, f),
+            "wu": expert_w(ks[2], d, f),
+            "wd": expert_w(ks[3], f, d)}
+
+
+def _expert_linear(ctx: QuantCtx, x: jnp.ndarray, p: Dict,
+                   col: Optional[Dict]) -> jnp.ndarray:
+    """x: (B, E, C, din) -> (B, E, C, dout), quantized acts + expert weights."""
+    xq = quantize_act(ctx, x, p, "s_in", col)
+    wq = quantize_weight_p(ctx, p)
+    return jnp.einsum("becd,edf->becf", xq, wq)
+
+
+def moe_fwd(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
+            col: Optional[Dict] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-choice top-k MoE with *per-batch-row* capacity dispatch.
+
+    Sharding-aware by construction: routing, position-in-expert, and the
+    dispatch/combine one-hots are computed independently per batch row, so
+    the batch axis stays data-sharded end to end (no sharded-dim scan, no
+    cross-device cumsum) and the experts axis shards over "model" (EP) or
+    d_ff does (TP). Chunked over sequence to bound the one-hot working set.
+    Returns (y, load-balance aux).
+    """
+    e, k = cfg.n_experts, cfg.n_experts_active
+    B, S, d = x.shape
+    sc = min(MOE_CHUNK_S, S)
+    nchunk = -(-S // sc)
+    pad = nchunk * sc - S
+    xs = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    cap = max(1, int(round(sc * k / e * MOE_CAPACITY_FACTOR)))
+    cap = min(cap + (-cap) % 4 if cap >= 4 else cap, sc * k)
+
+    def chunk(carry, xc):                               # xc: (B, sc, d)
+        logits = qlinear(ctx, xc, p["router"], subcol(col, "router"),
+                         act_bits=8, weight_bits=8).astype(jnp.float32)
+        vals, idx = jax.lax.top_k(logits, k)            # (B, sc, k)
+        gates = jax.nn.softmax(vals, axis=-1)
+        oh = jax.nn.one_hot(idx, e, dtype=jnp.bfloat16)  # (B, sc, k, e)
+        # position of each (token, slot) within its expert, counted along
+        # the flattened (s, k) order *within this row*
+        flat = oh.astype(jnp.float32).reshape(B, sc * k, e)
+        pos = (jnp.cumsum(flat, axis=1) - flat).reshape(B, sc, k, e)
+        pos = jnp.sum(pos * oh.astype(jnp.float32), axis=-1)  # (B, sc, k)
+        keep = pos < cap
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.bfloat16) \
+            * keep[..., None]                           # (B, sc, k, cap)
+        dispatch = jnp.einsum("bske,bskc->bsec", oh, pos_oh,
+                              preferred_element_type=jnp.bfloat16)
+        combine = jnp.einsum("bske,bskc,bsk->bsec", oh, pos_oh,
+                             gates.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+        xe = jnp.einsum("bsec,bsd->becd", dispatch, xc.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        xe = xe.astype(x.dtype)                         # (B, e, cap, d)
+        g = _expert_linear(ctx, xe, p["wg"], subcol(col, "wg"))
+        u = _expert_linear(ctx, xe, p["wu"], subcol(col, "wu"))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        ye = _expert_linear(ctx, h, p["wd"], subcol(col, "wd"))
+        yc = jnp.einsum("bsec,becd->bsd", combine.astype(jnp.bfloat16),
+                ye.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32)
+        # load-balance aux (Switch): e * sum_e(frac_tokens_e * frac_prob_e)
+        probs = jax.nn.softmax(logits, axis=-1)
+        frac_tok = jnp.mean(jnp.sum(oh, axis=2), axis=(0, 1))
+        frac_prob = jnp.mean(probs, axis=(0, 1))
+        aux = e * jnp.sum(frac_tok * frac_prob)
+        return carry, (yc.astype(x.dtype), aux)
+
+    if nchunk == 1:
+        _, (y, aux) = chunk(None, xs)
+        y, auxs = y, aux[None]
+    else:
+        _, (ys, auxs) = jax.lax.scan(
+            chunk, None,
+            jnp.moveaxis(xs.reshape(B, nchunk, sc, d), 1, 0))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * sc, d)
+    return y[:, :S], jnp.mean(auxs)
+
+
+# ==========================================================================
+# Attention block (self / cross), with quantized KV cache
+# ==========================================================================
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False,
+                   dtype=jnp.bfloat16) -> Dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": init_linear(ks[0], d, qd, bias=cfg.qkv_bias, dtype=dtype),
+         "wk": init_linear(ks[1], d, kvd, bias=cfg.qkv_bias, dtype=dtype),
+         "wv": init_linear(ks[2], d, kvd, bias=cfg.qkv_bias, dtype=dtype),
+         "wo": init_linear(ks[3], qd, d, dtype=dtype),
+         "s_q": jnp.float32(1.0), "s_k": jnp.float32(1.0),
+         "s_v": jnp.float32(1.0)}
+    if cfg.qk_norm and not cross:
+        hd = cfg.resolved_head_dim
+        p["q_norm"] = {"w": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"w": jnp.ones((hd,), dtype)}
+    return p
+
+
+def _qkv(cfg: ModelConfig, ctx: QuantCtx, p: Dict, xq: jnp.ndarray,
+         xkv: jnp.ndarray, rope, col, *, skip_rope: bool = False):
+    hd = cfg.resolved_head_dim
+    B, Sq = xq.shape[0], xq.shape[1]
+    Skv = xkv.shape[1]
+    q = qlinear(ctx, xq, p["wq"], subcol(col, "wq")).reshape(
+        B, Sq, cfg.n_heads, hd)
+    k = qlinear(ctx, xkv, p["wk"], subcol(col, "wk")).reshape(
+        B, Skv, cfg.n_kv_heads, hd)
+    v = qlinear(ctx, xkv, p["wv"], subcol(col, "wv")).reshape(
+        B, Skv, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = head_rms_norm(q, p["q_norm"]["w"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"]["w"], cfg.norm_eps)
+    if rope is not None and not skip_rope:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # paper sites: query INT16, cache C-bits
+    q = quantize_act(ctx, q, p, "s_q", col)
+    k = quantize_act(ctx, k, p, "s_k", col)
+    v = quantize_act(ctx, v, p, "s_v", col)
+    # distribution hints: when GQA kv-heads don't divide the TP axis, GSPMD
+    # otherwise splits head_dim and all-reduces every score tile (the
+    # dominant collective). Replicate K/V over "model" and shard either the
+    # q heads ("kv_rep") or the q sequence ("seq") instead.
+    if ctx.attn_shard_mode:
+        from repro.models.common import shard_hint
+        dp = ctx.batch_axes or None
+        if ctx.attn_shard_mode == "kv_rep":
+            q = shard_hint(q, dp, None, "model", None)
+        elif ctx.attn_shard_mode == "seq":
+            q = shard_hint(q, dp, "model", None, None)
+        k = shard_hint(k, dp, None, None, None)
+        v = shard_hint(v, dp, None, None, None)
+    return q, k, v
+
+
+def attn_fwd(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
+             rope, col: Optional[Dict] = None, *, window: int = 0,
+             enc_out: Optional[jnp.ndarray] = None,
+             causal: bool = True) -> jnp.ndarray:
+    """Self- (enc_out=None) or cross-attention, training/prefill path."""
+    B, S, _ = x.shape
+    xkv = enc_out if enc_out is not None else x
+    q, k, v = _qkv(cfg, ctx, p, x, xkv, rope, col,
+                   skip_rope=enc_out is not None)
+    # sequence-parallel attention keeps q positions sharded: one q block
+    # (chunking the sharded S would put a scan on a sharded axis)
+    qc = S if ctx.attn_shard_mode == "seq" else 1024
+    out = blockwise_attention(q, k, v,
+                              causal=causal and enc_out is None,
+                              window=window, q_chunk=qc,
+                              kv_chunk=512 if qc == S else 1024)
+    out = out.reshape(B, S, cfg.q_dim)
+    return qlinear(ctx, out, p["wo"], subcol(col, "wo"))
+
+
+def quantize_kv_for_cache(ctx: QuantCtx, p: Dict, k: jnp.ndarray,
+                          v: jnp.ndarray):
+    """(B,S,Hkv,D) bf16 -> cache layout (B,Hkv,S,D) + (B,Hkv,S) scales.
+
+    Dynamic policy: per-token absmax int scales. Static policy: the learned
+    LSQ scale broadcast per token. C16/off: bf16 storage, unit scales
+    (uniform cache format across policies).
+    """
+    from repro.core.qat import cache_quantize
+    bits = ctx.policy.cache_bits
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if ctx.off or bits >= 16 or ctx.policy.act_dynamic:
+        k_q, s_k = cache_quantize(ctx, kt, axis=-1)
+        v_q, s_v = cache_quantize(ctx, vt, axis=-1)
+        return k_q, v_q, s_k[..., 0], s_v[..., 0]
+    s_k = jnp.broadcast_to(p["s_k"], kt.shape[:-1]).astype(jnp.float32)
+    s_v = jnp.broadcast_to(p["s_v"], vt.shape[:-1]).astype(jnp.float32)
+    return (quantize_to_int(kt, s_k[..., None], bits),
+            quantize_to_int(vt, s_v[..., None], bits), s_k, s_v)
+
+
+def attn_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
+                 rope, col=None, *, window: int = 0, cache_len: int = 0,
+                 enc_out: Optional[jnp.ndarray] = None):
+    """Like attn_fwd but also emits the quantized cache for serving."""
+    B, S, _ = x.shape
+    xkv = enc_out if enc_out is not None else x
+    q, k, v = _qkv(cfg, ctx, p, x, xkv, rope, col,
+                   skip_rope=enc_out is not None)
+    qc = S if ctx.attn_shard_mode == "seq" else 1024
+    out = blockwise_attention(q, k, v, causal=enc_out is None, window=window,
+                              q_chunk=qc, kv_chunk=512 if qc == S else 1024)
+    out = out.reshape(B, S, cfg.q_dim)
+    y = qlinear(ctx, out, p["wo"], subcol(col, "wo"))
+    k_q, v_q, s_k, s_v = quantize_kv_for_cache(ctx, p, k, v)
+    S_in = k.shape[1]
+    Sc = cache_len or S_in
+    if window:
+        Sc = min(Sc, window)   # ring eviction enforces the sliding window
+    cache = _blank_attn_cache(B, cfg, Sc, k_q.dtype)
+    Sw = min(S_in, Sc)
+    # token at absolute position p lives at ring slot p % Sc ("length" stays
+    # monotonic; decode masks with min(length, Sc))
+    slots = (jnp.arange(Sw) + (S_in - Sw)) % Sc
+    cache["k_q"] = cache["k_q"].at[:, :, slots].set(k_q[:, :, -Sw:])
+    cache["v_q"] = cache["v_q"].at[:, :, slots].set(v_q[:, :, -Sw:])
+    cache["s_k"] = cache["s_k"].at[:, :, slots].set(s_k[:, :, -Sw:])
+    cache["s_v"] = cache["s_v"].at[:, :, slots].set(s_v[:, :, -Sw:])
+    cache["length"] = jnp.full((B,), S_in, jnp.int32)
+    return y, cache
+
+
+def _blank_attn_cache(B: int, cfg: ModelConfig, S: int, qdtype=jnp.int8):
+    hd = cfg.resolved_head_dim
+    return {
+        "k_q": jnp.zeros((B, cfg.n_kv_heads, S, hd), qdtype),
+        "v_q": jnp.zeros((B, cfg.n_kv_heads, S, hd), qdtype),
+        "s_k": jnp.zeros((B, cfg.n_kv_heads, S), jnp.float32),
+        "s_v": jnp.zeros((B, cfg.n_kv_heads, S), jnp.float32),
+        "length": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, B: int, S: int, *, window: int = 0,
+                    dtype=jnp.int8):
+    """window > 0 -> ring buffer bounded at window size (SWA decode)."""
+    Sc = min(S, window) if window else S
+    return _blank_attn_cache(B, cfg, Sc, dtype)
+
+
+def attn_decode(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x1: jnp.ndarray,
+                cache: Dict, positions: jnp.ndarray, *, window: int = 0,
+                cross: bool = False):
+    """One-token decode step. x1: (B, 1, d). Returns (y1, new_cache).
+
+    Self-attention writes the new K/V into the (ring-buffered when SWA)
+    int cache; cross-attention reads a frozen cache.
+    """
+    from repro.models.common import rope_tables  # local to avoid cycle
+    B = x1.shape[0]
+    hd = cfg.resolved_head_dim
+    if cross:
+        q = qlinear(ctx, x1, p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        q = quantize_act(ctx, q, p, "s_q")
+        out = decode_attention_intcache(
+            q[:, 0], cache["k_q"], cache["v_q"], cache["s_k"], cache["s_v"],
+            cache["length"])
+        y = qlinear(ctx, out.reshape(B, 1, cfg.q_dim)[:, 0], p["wo"])
+        return y[:, None], cache
+    rope = None
+    if cfg.rope_theta:
+        rope = rope_tables(positions[:, None], hd, cfg.rope_theta)
+    q, k, v = _qkv(cfg, ctx, p, x1, x1, rope, None)
+    k_q1, v_q1, s_k1, s_v1 = quantize_kv_for_cache(ctx, p, k, v)
+    Sc = cache["k_q"].shape[2]
+    slot = cache["length"] % Sc            # ring slot (== length pre-wrap)
+    bidx = jnp.arange(B)
+    new = dict(cache)
+    new["k_q"] = cache["k_q"].at[bidx, :, slot].set(k_q1[:, :, 0])
+    new["v_q"] = cache["v_q"].at[bidx, :, slot].set(v_q1[:, :, 0])
+    new["s_k"] = cache["s_k"].at[bidx, :, slot].set(s_k1[:, :, 0])
+    new["s_v"] = cache["s_v"].at[bidx, :, slot].set(s_v1[:, :, 0])
+    new["length"] = cache["length"] + 1
+    out = decode_attention_intcache(
+        q[:, 0], new["k_q"], new["v_q"], new["s_k"], new["s_v"],
+        jnp.minimum(new["length"], Sc))
+    y = qlinear(ctx, out.reshape(B, cfg.q_dim), p["wo"])
+    return y[:, None], new

@@ -1,0 +1,238 @@
+"""Shared model components: norms, rotary embeddings, chunked attention.
+
+All attention here is memory-aware (blockwise online-softmax — the pure-JAX
+analogue of flash attention) so 32k prefill never materializes an S x S score
+matrix. The softmax output is intentionally NOT quantized during training
+(paper §3.2: it is encapsulated by the attention kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qat import QuantCtx, quantize_act
+
+_NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# Norms (fp16/bf16 compute — never quantized, per the paper)
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, p: Dict, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, p: Dict, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def norm(x: jnp.ndarray, p: Dict, kind: str, eps: float) -> jnp.ndarray:
+    return rms_norm(x, p, eps) if kind == "rms" else layer_norm(x, p, eps)
+
+
+def init_norm(d: int, kind: str, dtype=jnp.bfloat16) -> Dict:
+    p = {"w": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def head_rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """qk_norm: RMS over head_dim (x: (..., H, D))."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_tables(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) -> cos/sin tables (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_tables(positions3: jnp.ndarray, head_dim: int,
+                 theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL multimodal rotary: 3 position streams (t, h, w) own
+    interleaved thirds of the frequency spectrum.
+
+    positions3: (3, B, S) -> cos/sin (B, S, head_dim/2).
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sect = jnp.arange(half) % 3                                  # stream id
+    ang_all = positions3.astype(jnp.float32)[..., None] * freqs  # (3,B,S,half)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), sect[None, None, :, None], axis=-1
+    )[..., 0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blockwise (flash-style) attention for training / prefill
+# --------------------------------------------------------------------------
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        q_chunk: int = 1024, kv_chunk: int = 1024,
+                        q_offset: int = 0,
+                        p_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Online-softmax attention, O(S * chunk) memory.
+
+    q: (B, S, H, D); k/v: (B, Skv, Hkv, D) — GQA broadcast by head repeat.
+    ``window`` > 0 restricts attention to the last ``window`` positions
+    (sliding window). ``q_offset`` shifts query positions (decode suffix).
+    """
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, Skv)
+    nq, nk = -(-S // q_chunk), -(-Skv // kv_chunk)
+    # pad to chunk multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_chunk - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_chunk - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_chunk - Skv), (0, 0), (0, 0)))
+    scale = D ** -0.5
+
+    # (nq, B, qc, H, D) chunk-major layouts for scan
+    qc = jnp.moveaxis(qp.reshape(B, nq, q_chunk, H, D), 1, 0)
+    kc = jnp.moveaxis(kp.reshape(B, nk, kv_chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(B, nk, kv_chunk, Hkv, D), 1, 0)
+
+    def q_block(qi, q_i):
+        q_i = q_i.astype(jnp.float32) * scale
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            ki, k_j, v_j = inp
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            # scores: (B, qc, H, kc) via GQA head grouping; fp32 accumulate,
+            # probability tensor materialized bf16 (it is the HBM hot spot;
+            # the accumulators m/l/acc stay fp32 so softmax numerics hold)
+            kf = k_j.astype(jnp.float32)
+            s_ = jnp.einsum("bqhd,bkhd->bqhk", q_i, kf)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            mask &= kpos[None, :] < Skv
+            mask &= (qpos[:, None] < q_offset + S)
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s_ = jnp.where(mask[None, :, None, :], s_, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            p = jnp.where(mask[None, :, None, :], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqhk,bkhd->bqhd", p.astype(p_dtype),
+                            v_j.astype(p_dtype),
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, q_chunk, H), _NEG, jnp.float32),
+                jnp.zeros((B, q_chunk, H), jnp.float32),
+                jnp.zeros((B, q_chunk, H, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(nk), kc, vc))
+        return acc / jnp.maximum(l[..., None], 1e-20)
+
+    # GQA: expand kv heads to q heads by index mapping inside the einsum is
+    # awkward; instead repeat kv heads (cheap views under XLA).
+    if group > 1:
+        kc = jnp.repeat(kc, group, axis=3)
+        vc = jnp.repeat(vc, group, axis=3)
+
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qc))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * q_chunk, H, D)
+    return out[:, :S].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Decode attention over an integer-quantized cache (XLA path)
+# --------------------------------------------------------------------------
+
+def decode_attention_intcache(q: jnp.ndarray, k_q: jnp.ndarray,
+                              v_q: jnp.ndarray, s_k: jnp.ndarray,
+                              s_v: jnp.ndarray,
+                              lengths: jnp.ndarray) -> jnp.ndarray:
+    """Single-token attention against an int8 cache.
+
+    The int8->bf16 converts fuse into the dots under XLA; per-token scales
+    fold into the score/probability tensors, so no dequantized K/V copy is
+    ever materialized in HBM (mirrors the Pallas kernel's VMEM strategy).
+
+    q (B,H,D); k_q/v_q (B,Hkv,S,D) int8; s_k/s_v (B,Hkv,S); lengths (B,).
+    """
+    B, H, D = q.shape
+    Hkv, S = k_q.shape[1], k_q.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D) * (D ** -0.5)
+    scores = jnp.einsum("bngd,bnsd->bngs", qf, k_q.astype(jnp.float32))
+    scores = scores * s_k[:, :, None, :].astype(jnp.float32)
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    ps = p * s_v[:, :, None, :].astype(jnp.float32)
+    out = jnp.einsum("bngs,bnsd->bngd", ps, v_q.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Sharding hints (no-ops outside a mesh context)
+# --------------------------------------------------------------------------
+
+def shard_hint(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint that degrades to identity without a mesh."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, TypeError, NameError):
+        return x
+
+
+# --------------------------------------------------------------------------
+# Calibration collector plumbing
+# --------------------------------------------------------------------------
+
+def subcol(col: Optional[Dict], key: str) -> Optional[Dict]:
+    """Child collector dict mirroring the params structure (or None)."""
+    if col is None:
+        return None
+    return col.setdefault(key, {})

@@ -1,0 +1,417 @@
+"""Unified model stack covering all assigned architectures.
+
+One decoder skeleton parameterized by ``ModelConfig.block_pattern``:
+dense/MoE GQA transformers (qwen*, mixtral, moonshot), hybrid RG-LRU +
+local-attention (recurrentgemma), mLSTM/sLSTM (xlstm), an encoder-decoder
+wrapper (whisper), and an M-RoPE VLM backbone (qwen2-vl).
+
+Layers are scanned: the repeating super-block (= block_pattern) is stacked
+along a leading ``repeat`` axis and driven by ``lax.scan``, keeping HLO size
+depth-independent (critical for the 512-device dry-run compile). Pattern
+remainders form a second, repeat-1 segment.
+
+Three entry points per model:
+* ``forward``      — training / teacher path (logits [+ calib stats, moe aux])
+* ``prefill``      — forward + emit quantized caches for serving
+* ``decode_step``  — one token against the quantized cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTENTION_BLOCKS, BLOCK_ATTN,
+                                BLOCK_LOCAL_ATTN, BLOCK_MLSTM, BLOCK_RGLRU,
+                                BLOCK_SLSTM, ModelConfig)
+from repro.core.qat import QuantCtx, init_linear, qlinear
+from repro.models import blocks as B
+from repro.models import recurrent as R
+from repro.models.common import (init_norm, mrope_tables, norm, rope_tables,
+                                 subcol)
+
+
+# --------------------------------------------------------------------------
+# Layer plan
+# --------------------------------------------------------------------------
+
+def segment_plan(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """[(kinds, repeat), ...] — full-pattern segment + optional remainder."""
+    pat = cfg.block_pattern
+    n_full, rem = divmod(cfg.n_layers, len(pat))
+    plan = []
+    if n_full:
+        plan.append((pat, n_full))
+    if rem:
+        plan.append((pat[:rem], 1))
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, kind: str, key, *, decoder_cross: bool,
+                dtype) -> Dict:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg.d_model, cfg.norm_type, dtype)}
+    if kind in ATTENTION_BLOCKS:
+        p["attn"] = B.init_attention(cfg, ks[0], dtype=dtype)
+        if decoder_cross:
+            p["ln_x"] = init_norm(cfg.d_model, cfg.norm_type, dtype)
+            p["xattn"] = B.init_attention(cfg, ks[1], cross=True, dtype=dtype)
+        p["ln2"] = init_norm(cfg.d_model, cfg.norm_type, dtype)
+        p["moe" if cfg.is_moe else "mlp"] = (
+            B.init_moe(cfg, ks[2], dtype) if cfg.is_moe
+            else B.init_mlp(cfg, ks[2], dtype))
+    elif kind == BLOCK_RGLRU:
+        p["rglru"] = R.init_rglru(cfg, ks[0], dtype)
+        p["ln2"] = init_norm(cfg.d_model, cfg.norm_type, dtype)
+        p["mlp"] = B.init_mlp(cfg, ks[1], dtype)
+    elif kind == BLOCK_MLSTM:
+        p["cell"] = R.init_mlstm(cfg, ks[0], dtype)
+    elif kind == BLOCK_SLSTM:
+        p["cell"] = R.init_slstm(cfg, ks[0], dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_segment(cfg, kinds, repeat, key, *, decoder_cross, dtype):
+    def one(k):
+        kk = jax.random.split(k, len(kinds))
+        return {str(i): _init_block(cfg, kind, kk[i],
+                                    decoder_cross=decoder_cross, dtype=dtype)
+                for i, kind in enumerate(kinds)}
+    layers = [one(k) for k in jax.random.split(key, repeat)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": {"w": (jax.random.normal(ks[0], (cfg.vocab_size,
+                                                  cfg.d_model), jnp.float32)
+                        * 0.02).astype(dtype)},
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type, dtype),
+        "segments": [
+            _init_segment(cfg, kinds, rep, jax.random.fold_in(ks[1], i),
+                          decoder_cross=cfg.is_encdec, dtype=dtype)
+            for i, (kinds, rep) in enumerate(segment_plan(cfg))],
+    }
+    if cfg.tie_embeddings:
+        # tied head still owns its quantizer scales (8-bit head site)
+        params["head"] = {"s_w": jnp.ones((1, cfg.vocab_size), jnp.float32),
+                          "s_in": jnp.float32(1.0)}
+    else:
+        params["head"] = init_linear(ks[2], cfg.d_model, cfg.vocab_size,
+                                     dtype=dtype)
+    if cfg.max_position_embeddings:
+        params["pos_embed"] = {
+            "w": (jax.random.normal(ks[3], (cfg.max_position_embeddings,
+                                            cfg.d_model), jnp.float32)
+                  * 0.02).astype(dtype)}
+    if cfg.is_encdec:
+        params["encoder"] = {
+            "pos_embed": {"w": (jax.random.normal(
+                ks[4], (cfg.encoder_seq, cfg.d_model), jnp.float32)
+                * 0.02).astype(dtype)},
+            "segments": [_init_segment(cfg, (BLOCK_ATTN,), cfg.encoder_layers,
+                                       ks[5], decoder_cross=False,
+                                       dtype=dtype)],
+            "final_norm": init_norm(cfg.d_model, cfg.norm_type, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward (train / teacher / calibration)
+# --------------------------------------------------------------------------
+
+def _rope_for(cfg: ModelConfig, batch: Dict, S: int):
+    if not cfg.rope_theta:
+        return None
+    hd = cfg.resolved_head_dim
+    if cfg.mrope and "positions" in batch:
+        return mrope_tables(batch["positions"], hd, cfg.rope_theta)
+    return rope_tables(jnp.arange(S), hd, cfg.rope_theta)
+
+
+def _block_fwd(cfg, ctx, kind, p, x, consts, col, *, prefill=False):
+    """Returns (x, aux, cache|None)."""
+    aux = jnp.float32(0.0)
+    cache = None
+    if kind in ATTENTION_BLOCKS:
+        window = (cfg.local_window if kind == BLOCK_LOCAL_ATTN
+                  else cfg.sliding_window)
+        h = norm(x, p["ln1"], cfg.norm_type, cfg.norm_eps)
+        if prefill:
+            a, cache_sa = B.attn_prefill(
+                cfg, ctx, p["attn"], h, consts["rope"], subcol(col, "attn"),
+                window=window, cache_len=consts.get("cache_len", 0))
+            cache = {"self": cache_sa}
+        else:
+            a = B.attn_fwd(cfg, ctx, p["attn"], h, consts["rope"],
+                           subcol(col, "attn"), window=window)
+        x = x + a
+        if "xattn" in p:
+            h = norm(x, p["ln_x"], cfg.norm_type, cfg.norm_eps)
+            if prefill:
+                a, cache_xa = B.attn_prefill(
+                    cfg, ctx, p["xattn"], h, None, subcol(col, "xattn"),
+                    enc_out=consts["enc_out"])
+                cache["cross"] = cache_xa
+            else:
+                a = B.attn_fwd(cfg, ctx, p["xattn"], h, None,
+                               subcol(col, "xattn"),
+                               enc_out=consts["enc_out"])
+            x = x + a
+        h = norm(x, p["ln2"], cfg.norm_type, cfg.norm_eps)
+        if cfg.is_moe:
+            y, aux = B.moe_fwd(cfg, ctx, p["moe"], h, subcol(col, "moe"))
+        else:
+            y = B.mlp_fwd(cfg, ctx, p["mlp"], h, subcol(col, "mlp"))
+        x = x + y
+    elif kind == BLOCK_RGLRU:
+        h = norm(x, p["ln1"], cfg.norm_type, cfg.norm_eps)
+        if prefill:
+            y, cache = R.rglru_prefill(cfg, ctx, p["rglru"], h,
+                                       subcol(col, "rglru"))
+        else:
+            y = R.rglru_fwd(cfg, ctx, p["rglru"], h, subcol(col, "rglru"))
+        x = x + y
+        h = norm(x, p["ln2"], cfg.norm_type, cfg.norm_eps)
+        x = x + B.mlp_fwd(cfg, ctx, p["mlp"], h, subcol(col, "mlp"))
+    elif kind in (BLOCK_MLSTM, BLOCK_SLSTM):
+        h = norm(x, p["ln1"], cfg.norm_type, cfg.norm_eps)
+        mod = R.mlstm_prefill if kind == BLOCK_MLSTM else R.slstm_prefill
+        fwd = R.mlstm_fwd if kind == BLOCK_MLSTM else R.slstm_fwd
+        if prefill:
+            y, cache = mod(cfg, ctx, p["cell"], h, subcol(col, "cell"))
+        else:
+            y = fwd(cfg, ctx, p["cell"], h, subcol(col, "cell"))
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def _run_stack(cfg, ctx, segments_params, plan, x, consts, *,
+               collect: bool, prefill: bool = False, remat: bool = False):
+    """Scan every segment. Returns (x, cols, auxs, caches)."""
+    cols, auxs, caches = [], [], []
+    for seg_p, (kinds, rep) in zip(segments_params, plan):
+        def body(xc, layer_p):
+            col = {} if collect else None
+            aux = jnp.float32(0.0)
+            cache = {}
+            for i, kind in enumerate(kinds):
+                xc, a, c = _block_fwd(cfg, ctx, kind, layer_p[str(i)], xc,
+                                      consts, subcol(col, str(i)),
+                                      prefill=prefill)
+                aux = aux + a
+                if prefill:
+                    cache[str(i)] = c
+            ys = (col if collect else {}, aux, cache if prefill else {})
+            return xc, ys
+        if remat:
+            body = jax.checkpoint(body)  # per-layer activation rematerialization
+        x, (col_s, aux_s, cache_s) = jax.lax.scan(body, x, seg_p)
+        cols.append(col_s)
+        auxs.append(jnp.sum(aux_s))
+        caches.append(cache_s)
+    return x, cols, auxs, caches
+
+
+def _embed(cfg: ModelConfig, params, batch: Dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    if "patches" in batch:          # VLM: precomputed patch-embedding prefix
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if "pos_embed" in params:
+        S = x.shape[1]
+        off = batch.get("pos_offset", 0)
+        pos = params["pos_embed"]["w"]
+        x = x + jax.lax.dynamic_slice_in_dim(pos, off, S, 0)[None]
+    return x
+
+
+def _encode(cfg, ctx, params, batch, col):
+    enc = params["encoder"]
+    h = batch["frames"].astype(enc["pos_embed"]["w"].dtype)
+    h = h + enc["pos_embed"]["w"][None, :h.shape[1]]
+    consts = {"rope": None, "enc_out": None}
+    plan = [((BLOCK_ATTN,), cfg.encoder_layers)]
+    # encoder attention is bidirectional: causal off via window=0 & flag
+    def body(xc, layer_p):
+        cc = {} if col is not None else None
+        hh = norm(xc, layer_p["0"]["ln1"], cfg.norm_type, cfg.norm_eps)
+        a = B.attn_fwd(cfg, ctx, layer_p["0"]["attn"], hh, None,
+                       subcol(cc, "0attn"), causal=False)
+        xc = xc + a
+        hh = norm(xc, layer_p["0"]["ln2"], cfg.norm_type, cfg.norm_eps)
+        xc = xc + B.mlp_fwd(cfg, ctx, layer_p["0"]["mlp"], hh,
+                            subcol(cc, "0mlp"))
+        return xc, (cc if col is not None else {})
+    h, enc_cols = jax.lax.scan(body, h, enc["segments"][0])
+    if col is not None:
+        col["encoder"] = enc_cols
+    return norm(h, enc["final_norm"], cfg.norm_type, cfg.norm_eps)
+
+
+def head_logits(cfg: ModelConfig, params, ctx: QuantCtx, x: jnp.ndarray,
+                col: Optional[Dict] = None) -> jnp.ndarray:
+    hb = ctx.policy.head_bits
+    if cfg.tie_embeddings:
+        p = {"w": params["embed"]["w"].T, "s_w": params["head"]["s_w"],
+             "s_in": params["head"]["s_in"]}
+    else:
+        p = params["head"]
+    return qlinear(ctx, x, p, subcol(col, "head"),
+                   act_bits=hb, weight_bits=hb)
+
+
+def forward(cfg: ModelConfig, params: Dict, ctx: QuantCtx, batch: Dict,
+            collect_stats: bool = False, remat: bool = False):
+    """Training/teacher forward. Returns (logits, {"moe_aux", "qstats"})."""
+    x = _embed(cfg, params, batch)
+    S = x.shape[1]
+    col: Optional[Dict] = {} if collect_stats else None
+    consts = {"rope": _rope_for(cfg, batch, S), "enc_out": None}
+    if cfg.is_encdec:
+        consts["enc_out"] = _encode(cfg, ctx, params, batch, col)
+    x, cols, auxs, _ = _run_stack(cfg, ctx, params["segments"],
+                                  segment_plan(cfg), x, consts,
+                                  collect=collect_stats, remat=remat)
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = head_logits(cfg, params, ctx, x, col)
+    aux = {"moe_aux": sum(auxs) if auxs else jnp.float32(0.0)}
+    if collect_stats:
+        col["segments"] = cols
+        aux["qstats"] = col
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# Prefill / decode (serving)
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Dict, ctx: QuantCtx, batch: Dict,
+            cache_budget: int = 0):
+    """Forward pass that also emits the quantized serving cache.
+
+    ``cache_budget``: total cache capacity (>= prompt length; extra room for
+    decode steps). Returns (logits, cache_pytree).
+    """
+    x = _embed(cfg, params, batch)
+    S = x.shape[1]
+    consts = {"rope": _rope_for(cfg, batch, S), "enc_out": None,
+              "cache_len": cache_budget or S}
+    if cfg.is_encdec:
+        consts["enc_out"] = _encode(cfg, ctx, params, batch, None)
+    x, _, _, caches = _run_stack(cfg, ctx, params["segments"],
+                                 segment_plan(cfg), x, consts,
+                                 collect=False, prefill=True)
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = head_logits(cfg, params, ctx, x[:, -1:])
+    return logits, {"segments": caches,
+                    "position": jnp.full((x.shape[0],), S, jnp.int32)}
+
+
+def _block_decode(cfg, ctx, kind, p, x1, cache, positions):
+    if kind in ATTENTION_BLOCKS:
+        window = (cfg.local_window if kind == BLOCK_LOCAL_ATTN
+                  else cfg.sliding_window)
+        h = norm(x1, p["ln1"], cfg.norm_type, cfg.norm_eps)
+        a, new_sa = B.attn_decode(cfg, ctx, p["attn"], h, cache["self"],
+                                  positions, window=window)
+        x1 = x1 + a
+        new_cache = {"self": new_sa}
+        if "xattn" in p:
+            h = norm(x1, p["ln_x"], cfg.norm_type, cfg.norm_eps)
+            a, _ = B.attn_decode(cfg, ctx, p["xattn"], h, cache["cross"],
+                                 positions, cross=True)
+            x1 = x1 + a
+            new_cache["cross"] = cache["cross"]
+        h = norm(x1, p["ln2"], cfg.norm_type, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = B.moe_fwd(cfg, ctx, p["moe"], h)
+        else:
+            y = B.mlp_fwd(cfg, ctx, p["mlp"], h)
+        return x1 + y, new_cache
+    if kind == BLOCK_RGLRU:
+        h = norm(x1, p["ln1"], cfg.norm_type, cfg.norm_eps)
+        y, new_c = R.rglru_decode(cfg, ctx, p["rglru"], h, cache)
+        x1 = x1 + y
+        h = norm(x1, p["ln2"], cfg.norm_type, cfg.norm_eps)
+        return x1 + B.mlp_fwd(cfg, ctx, p["mlp"], h), new_c
+    h = norm(x1, p["ln1"], cfg.norm_type, cfg.norm_eps)
+    dec = R.mlstm_decode if kind == BLOCK_MLSTM else R.slstm_decode
+    y, new_c = dec(cfg, ctx, p["cell"], h, cache)
+    return x1 + y, new_c
+
+
+def decode_step(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
+                tokens1: jnp.ndarray, cache: Dict):
+    """One decode step. tokens1 (B, 1) -> (logits (B, 1, V), new cache)."""
+    positions = cache["position"]
+    batch = {"tokens": tokens1, "pos_offset": 0}
+    x = jnp.take(params["embed"]["w"], tokens1, axis=0)
+    if "pos_embed" in params:
+        x = x + jnp.take(params["pos_embed"]["w"],
+                         jnp.minimum(positions,
+                                     params["pos_embed"]["w"].shape[0] - 1),
+                         axis=0)[:, None]
+    new_caches = []
+    for seg_p, seg_c, (kinds, rep) in zip(params["segments"],
+                                          cache["segments"],
+                                          segment_plan(cfg)):
+        def body(xc, inp):
+            layer_p, layer_c = inp
+            new_lc = {}
+            for i, kind in enumerate(kinds):
+                xc, nc = _block_decode(cfg, ctx, kind, layer_p[str(i)], xc,
+                                       layer_c[str(i)], positions)
+                new_lc[str(i)] = nc
+            return xc, new_lc
+        x, new_c = jax.lax.scan(body, x, (seg_p, seg_c))
+        new_caches.append(new_c)
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = head_logits(cfg, params, ctx, x)
+    return logits, {"segments": new_caches, "position": positions + 1}
+
+
+# --------------------------------------------------------------------------
+# Cache allocation (for dry-run ShapeDtypeStructs and the serve engine)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, ctx: QuantCtx, batch_size: int,
+               cache_len: int) -> Dict:
+    """Blank serving cache with total capacity ``cache_len``."""
+    from repro.core.qat import cache_dtype
+    qdt = cache_dtype(ctx)
+
+    def block_cache(kind):
+        if kind in ATTENTION_BLOCKS:
+            window = (cfg.local_window if kind == BLOCK_LOCAL_ATTN
+                      else cfg.sliding_window)
+            c = {"self": B.init_attn_cache(cfg, batch_size, cache_len,
+                                           window=window, dtype=qdt)}
+            if cfg.is_encdec:
+                c["cross"] = B.init_attn_cache(cfg, batch_size,
+                                               cfg.encoder_seq, dtype=qdt)
+            return c
+        if kind == BLOCK_RGLRU:
+            return R.init_rglru_cache(cfg, batch_size, dtype=qdt)
+        if kind == BLOCK_MLSTM:
+            return R.init_mlstm_cache(cfg, batch_size, dtype=qdt)
+        return R.init_slstm_cache(cfg, batch_size, dtype=qdt)
+
+    segments = []
+    for kinds, rep in segment_plan(cfg):
+        layer = {str(i): block_cache(kind) for i, kind in enumerate(kinds)}
+        segments.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (rep,) + x.shape), layer))
+    return {"segments": segments,
+            "position": jnp.zeros((batch_size,), jnp.int32)}

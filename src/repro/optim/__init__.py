@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, sqrt_rescaled_lr
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "sqrt_rescaled_lr"]

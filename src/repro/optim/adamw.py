@@ -1,0 +1,78 @@
+"""AdamW with SiLQ parameter groups (paper Appendix B).
+
+beta1=0.9, beta2=0.95, eps=1e-10; weight decay 0.1 on matrix weights only —
+never on quantizer step sizes, norms, or biases; activation-quantizer scales
+(``s_in``/``s_q``/``s_k``/``s_v``/``s_state``) get a 50x learning-rate boost
+(paper §3.1 / Table 4 ``Act Lrx``). Moments kept in fp32 regardless of param
+dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qat import act_scale_mask, scale_mask
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Scale the gradient tree so its global L2 norm is <= max_norm."""
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def _decay_mask(params):
+    """True where weight decay applies: >=2-D tensors that are not scales."""
+    scales = scale_mask(params)
+    return jax.tree.map(lambda p, is_s: (p.ndim >= 2) and not is_s,
+                        params, scales)
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 beta1: float = 0.9, beta2: float = 0.95,
+                 eps: float = 1e-10, weight_decay: float = 0.1,
+                 act_scale_lr_mult: float = 50.0):
+    """One AdamW step; ``lr`` may be a traced scalar (schedule)."""
+    step = state.step + 1
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+    decay = _decay_mask(params)
+    boost = act_scale_mask(params)
+
+    def upd(p, g, m, v, dec, bst):
+        gf = g.astype(jnp.float32)
+        m = beta1 * m + (1 - beta1) * gf
+        v = beta2 * v + (1 - beta2) * gf * gf
+        mhat = m / b1c
+        vhat = v / b2c
+        g_lr = lr * (act_scale_lr_mult if bst else 1.0)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        if dec:
+            upd = upd + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - g_lr * upd).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v, decay, boost)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

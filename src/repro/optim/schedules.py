@@ -1,0 +1,23 @@
+"""LR schedules: cosine-to-floor (paper: min = 10% of base, no warmup) and
+the power-scheduler square-root rescaling rule for changed run lengths
+(Shen et al., 2024 — paper Appendix B)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, total_steps: int,
+                    warmup_steps: int = 0, min_lr_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.where(warmup_steps > 0,
+                     jnp.minimum(s / jnp.maximum(warmup_steps, 1), 1.0), 1.0)
+    prog = jnp.clip((s - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    floor = min_lr_ratio
+    return base_lr * warm * (floor + (1.0 - floor) * cos)
+
+
+def sqrt_rescaled_lr(base_lr: float, ref_steps: int, total_steps: int) -> float:
+    """lr(T) = lr(T_ref) * sqrt(T_ref / T): 4x longer run -> half the LR."""
+    return base_lr * (ref_steps / total_steps) ** 0.5

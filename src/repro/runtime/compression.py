@@ -1,0 +1,56 @@
+"""Gradient compression for cross-replica all-reduce (beyond-paper trick).
+
+Reuses the paper's own quantizer machinery on the *communication* path:
+gradients are int8-quantized per tensor (shared scale via a scalar ``pmax``)
+and exchanged as **int8 payloads** (``all_gather``), then summed and
+dequantized locally, with fp32 error feedback so the quantization bias is
+re-injected on the next step (EF-SGD convergence guarantee).
+
+Bytes on the synced axis per tensor of N elements, R replicas:
+    fp32 ring all-reduce:   ~2 * 4N
+    int8 all-gather:        (R-1) * N
+For the cross-pod axis (R=2, the scarce link in the production mesh) this is
+an ~8x reduction; it remains a win for R <= 8. Designed for the pod axis of
+the 2x16x16 mesh — the per-pod DP/TP axes keep XLA's native reductions.
+
+Usage (inside a shard_map'd step over the compressed axis)::
+
+    g_sync, new_err = compressed_psum(grads, err, axis_name="pod")
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads: Any, err: Any, axis_name: str) -> Tuple[Any, Any]:
+    """int8-payload mean-all-reduce with error feedback.
+
+    Returns (mean_grads, new_err). Must run inside shard_map/pmap with
+    ``axis_name`` bound.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        # shared scale across replicas (scalar collective, negligible bytes)
+        amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_e = gf - q.astype(jnp.float32) * scale     # error feedback
+        allq = jax.lax.all_gather(q, axis_name)        # int8 on the wire
+        g_sync = jnp.sum(allq.astype(jnp.float32), axis=0) * scale / n
+        return g_sync.astype(g.dtype), new_e
+
+    flat = jax.tree.map(one, grads, err)
+    g_sync = jax.tree.map(lambda t: t[0], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return g_sync, new_err

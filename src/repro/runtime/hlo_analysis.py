@@ -1,0 +1,388 @@
+"""Post-SPMD HLO analysis: collective bytes, loop-aware.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled HLO text: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter``
+/ ``all-to-all`` / ``collective-permute`` op contributes its result-shape
+bytes. Collectives inside ``while`` bodies (layer scans, MoE chunk scans,
+attention chunk maps) execute trip-count times, so we
+
+1. build the computation call graph (body=/condition=/to_apply=/calls=),
+2. recover each while's static trip count from the ``constant(N)`` in its
+   condition computation (XLA emits ``compare(iter, N), direction=LT`` for
+   scan-generated loops),
+3. multiply each collective's bytes by the product of enclosing trip counts.
+
+Heuristic but validated against known scan structures in tests; falls back
+to multiplier 1 (and flags it) when a trip count cannot be recovered.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->", re.M)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_CALL_KW = re.compile(
+    r"(to_apply|body|condition|calls)=%?([\w\.\-]+)")
+_CALL_LIST = re.compile(
+    r"(?:branch_computations|called_computations|calls)=\{([^}]*)\}")
+
+
+def _callees(line: str):
+    """[(name, is_while_body), ...] referenced from one HLO op line."""
+    out = []
+    for kw, name in _CALL_KW.findall(line):
+        out.append((name, kw == "body"))
+    for grp in _CALL_LIST.findall(line):
+        for name in re.split(r"[,\s%]+", grp):
+            if name:
+                out.append((name, False))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] group in a result type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its body lines (robust to tuple-typed params)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if cur is None or ls.endswith("{"):
+            if ls.endswith("{") and "->" in ls:
+                m = _HDR_RE.match(ls)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    continue
+        if cur is not None:
+            comps[cur].append(line)
+            if ls == "}":
+                cur = None
+    return comps
+
+
+# ops that alias / relabel buffers: no HBM traffic of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "iota", "broadcast", "reshape", "transpose", "copy-start", "copy-done",
+}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],\{\}]+))\s+"
+    r"([\w\-]+)\(")
+_DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _first_dims(type_str: str):
+    m = _DIMS_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",")] if m.group(1) else []
+
+
+def _entry_and_mult(hlo: str, comps):
+    """(entry, trip, mult, exec_comps): loop multipliers + the set of
+    computations that execute as program code (not fusion/reducer bodies)."""
+    entry = None
+    for line in hlo.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_RE.match(line.strip().removeprefix("ENTRY").strip())
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+
+    trip: Dict[str, int] = {}
+    unresolved = 0
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if not mb:
+                continue
+            count = None
+            if mc and mc.group(1) in comps:
+                consts = [int(x) for x in
+                          _CONST_RE.findall("\n".join(comps[mc.group(1)]))]
+                consts = [c for c in consts if c > 0]
+                if consts:
+                    count = max(consts)
+            if count is None:
+                unresolved += 1
+                count = 1
+            trip[mb.group(1)] = count
+
+    mult: Dict[str, float] = {}
+    exec_comps = set()
+
+    def visit(comp: str, m: float, seen: frozenset, is_exec: bool):
+        if comp not in comps or comp in seen:
+            return
+        if is_exec:
+            exec_comps.add(comp)
+        if m <= mult.get(comp, 0.0):
+            return
+        mult[comp] = m
+        seen = seen | {comp}
+        for line in comps[comp]:
+            for callee, kw in _callees_kw(line):
+                if callee not in comps:
+                    continue
+                child_m = m * trip.get(callee, 1) if kw == "body" else m
+                # only while bodies/conditions execute as program regions;
+                # fusion bodies / reducers are accounted at their call site
+                visit(callee, child_m, seen,
+                      is_exec and kw in ("body", "condition"))
+
+    if entry:
+        visit(entry, 1.0, frozenset(), True)
+    return entry, trip, mult, exec_comps, unresolved
+
+
+def _callees_kw(line: str):
+    out = []
+    for kw, name in _CALL_KW.findall(line):
+        out.append((name, kw))
+    for grp in _CALL_LIST.findall(line):
+        for name in re.split(r"[,\s%]+", grp):
+            if name:
+                out.append((name, "calls"))
+    return out
+
+
+def analyze_program(hlo: str) -> Dict:
+    """Loop-aware program analysis of post-SPMD compiled HLO.
+
+    Returns per-device-program totals:
+      flops        — 2*prod(result)*contraction for every dot, x loop trips
+      hbm_bytes    — operand+result bytes of fusion-boundary ops, x trips
+                     (dynamic-(update-)slice counted at slice size: in-place)
+      collectives  — {"total_bytes", "by_op", "per_site"}
+      unresolved_loops
+    """
+    comps = _split_computations(hlo)
+    entry, trip, mult, exec_comps, unresolved = _entry_and_mult(hlo, comps)
+
+    flops = 0.0
+    hbm = 0.0
+    by_op: Dict[str, float] = defaultdict(float)
+    per_site = []
+    hbm_sites = []
+    for cname in exec_comps:
+        m = mult.get(cname, 1.0) or 1.0
+        shapes: Dict[str, str] = {}
+        parsed = []
+        for line in comps[cname]:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            name, type_str, op = om.group(1), om.group(2), om.group(3)
+            shapes[name] = type_str
+            parsed.append((name, type_str, op, line))
+        for name, type_str, op, line in parsed:
+            if op in _NO_TRAFFIC:
+                continue
+            out_b = _shape_bytes(type_str)
+            # ---- collectives ----
+            base = next((c for c in COLLECTIVE_OPS
+                         if op in (c, c + "-start", c + "-done")), None)
+            if base is not None:
+                if op.endswith("-done"):
+                    continue
+                b = out_b * m
+                by_op[base] += b
+                per_site.append({"op": base, "computation": cname,
+                                 "bytes": b, "mult": m,
+                                 "line": line.strip()[:160]})
+                hbm += out_b * m        # collectives also touch HBM
+                continue
+            # ---- dot flops ----
+            if op == "dot":
+                ops_names = _OPERAND_RE.findall(
+                    line.split("(", 1)[1].split(")", 1)[0])
+                lhs_dims = _first_dims(shapes.get(ops_names[0], "")) \
+                    if ops_names else []
+                cm = _LHS_CONTRACT_RE.search(line)
+                contract = 1
+                if cm and lhs_dims:
+                    for i in (int(x) for x in cm.group(1).split(",")
+                              if x != ""):
+                        if i < len(lhs_dims):
+                            contract *= lhs_dims[i]
+                res_elems = 1
+                for d in _first_dims(type_str):
+                    res_elems *= d
+                flops += 2.0 * res_elems * contract * m
+            # ---- HBM traffic at fusion boundaries ----
+            if op in ("dynamic-update-slice",):
+                arg = line.split("(", 1)[1]
+                ops_names = _OPERAND_RE.findall(arg.split(")", 1)[0])
+                upd = shapes.get(ops_names[1], "") if len(ops_names) > 1 \
+                    else ""
+                hbm += 2.0 * _shape_bytes(upd) * m      # read+write the slice
+                continue
+            if op == "dynamic-slice":
+                hbm += 2.0 * out_b * m
+                continue
+            in_b = 0
+            arg_span = line.split("(", 1)[1]
+            depth, end = 1, 0
+            for i, ch in enumerate(arg_span):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_bytes = []
+            for on in _OPERAND_RE.findall(arg_span[:end]):
+                if on in shapes:
+                    b = _shape_bytes(shapes[on])
+                    in_b += b
+                    operand_bytes.append((b, shapes[on]))
+            op_traffic = out_b + in_b
+            # scan residual stashes: XLA aliases dynamic-(update-)slice
+            # fusions in place — charging the whole stacked buffer per loop
+            # iteration would fabricate TBs of traffic. Count the slice.
+            if op == "fusion":
+                cm2 = re.search(r"calls=%?([\w\.\-]+)", line)
+                body = comps.get(cm2.group(1), []) if cm2 else []
+                has_dus = any(" dynamic-update-slice(" in l for l in body)
+                has_ds = any(" dynamic-slice(" in l for l in body)
+                if has_dus or has_ds:
+                    aliased = max((b for b, t in operand_bytes
+                                   if t == type_str or b >= 0.9 * out_b),
+                                  default=0)
+                    if has_dus:
+                        op_traffic = max(out_b + in_b - 2 * aliased, 0)
+                    else:   # dynamic-slice: read slice, not the buffer
+                        op_traffic = max(in_b - aliased, 0) + 2 * out_b
+            hbm += op_traffic * m
+            if op_traffic * m > 0:
+                meta = re.search(r'op_name="([^"]*)"', line)
+                hbm_sites.append((op_traffic * m, op,
+                                  (meta.group(1)[-110:] if meta else
+                                   cname[:60])))
+
+    hbm_sites.sort(key=lambda t: -t[0])
+    return {"flops": flops, "hbm_bytes": hbm,
+            "hbm_top": [{"bytes": b, "op": o, "where": w}
+                        for b, o, w in hbm_sites[:30]],
+            "collectives": {"total_bytes": float(sum(by_op.values())),
+                            "by_op": {k: float(v) for k, v in by_op.items()},
+                            "per_site": sorted(per_site,
+                                               key=lambda s: -s["bytes"])[:40]},
+            "unresolved_loops": unresolved}
+
+
+def analyze_collectives(hlo: str) -> Dict:
+    """Returns {"total_bytes", "by_op", "per_site", "unresolved_loops"}."""
+    comps = _split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_RE.match(line.strip().removeprefix("ENTRY").strip())
+            if m:
+                entry = m.group(1)
+    if entry is None:   # fall back: computation containing while or most ops
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+
+    # while body -> trip count (from its condition computation)
+    trip: Dict[str, int] = {}
+    unresolved = 0
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if not mb:
+                continue
+            count = None
+            if mc and mc.group(1) in comps:
+                consts = [int(x) for x in
+                          _CONST_RE.findall("\n".join(comps[mc.group(1)]))]
+                consts = [c for c in consts if c > 0]
+                if consts:
+                    count = max(consts)
+            if count is None:
+                unresolved += 1
+                count = 1
+            trip[mb.group(1)] = count
+
+    # multiplier per computation via DFS over the call graph
+    mult: Dict[str, float] = {}
+
+    def visit(comp: str, m: float, seen: frozenset):
+        if comp not in comps or comp in seen:
+            return
+        if m <= mult.get(comp, 0.0):
+            return                      # already visited at >= multiplier
+        mult[comp] = m
+        seen = seen | {comp}
+        for line in comps[comp]:
+            for callee, is_body in _callees(line):
+                if callee not in comps:
+                    continue
+                child_m = m * trip.get(callee, 1) if is_body else m
+                visit(callee, child_m, seen)
+
+    if entry:
+        visit(entry, 1.0, frozenset())
+
+    by_op: Dict[str, float] = defaultdict(float)
+    per_site = []
+    coll_line = re.compile(
+        r"%?[\w\.\-]+\s*=\s*(.+?)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\(")
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0) or 1.0
+        for line in lines:
+            mm = coll_line.match(line.strip())
+            if not mm:
+                continue
+            shape_txt, op = mm.group(1), mm.group(2)
+            b = _shape_bytes(shape_txt) * m
+            by_op[op] += b
+            per_site.append({"op": op, "computation": cname,
+                             "bytes": b, "mult": m,
+                             "line": line.strip()[:160]})
+    return {"total_bytes": float(sum(by_op.values())),
+            "by_op": {k: float(v) for k, v in by_op.items()},
+            "per_site": sorted(per_site, key=lambda s: -s["bytes"])[:40],
+            "unresolved_loops": unresolved}

@@ -1,0 +1,110 @@
+"""Batched serving engine over the quantized cache.
+
+Slot-based continuous batching (vLLM-lite, sized for the framework's serve
+path): a fixed number of slots share one decode step; finished sequences
+free their slot, queued requests prefill into it. All state (int8 KV /
+recurrent caches) lives in one pytree so the decode step stays a single
+compiled program.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qat import make_ctx
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                    # -1: never stops early
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, policy: str = "A8d-C8-W4",
+                 slots: int = 8, cache_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = make_ctx(policy)
+        self.slots = slots
+        self.cache_len = cache_len
+        self.cache = init_cache(cfg, self.ctx, slots, cache_len)
+        self.active: Dict[int, Request] = {}        # slot -> request
+        self.queue: List[Request] = []
+        self.last_tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, self.ctx, t, c))
+        self._stats = {"tokens_out": 0, "decode_steps": 0, "decode_s": 0.0}
+
+    # ---- request lifecycle ----
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (per-slot prefill)."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+            logits, cache1 = prefill(self.cfg, self.params, self.ctx, batch,
+                                     cache_budget=self.cache_len)
+            first = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(first)
+            self._write_slot(slot, cache1)
+            self.last_tokens = self.last_tokens.at[slot, 0].set(first)
+            self.active[slot] = req
+
+    def _write_slot(self, slot: int, cache1) -> None:
+        """Copy a freshly prefilled (batch=1) cache into slot ``slot``."""
+        def cp(dst, src):
+            if dst.ndim == src.ndim and dst.shape[0] == self.slots:
+                return dst.at[slot].set(src[0])
+            # scan-stacked leaves: (rep, B, ...) vs (rep, 1, ...)
+            return dst.at[:, slot].set(src[:, 0])
+        # position vector is (slots,) vs (1,)
+        self.cache = jax.tree.map(
+            lambda d, s: d.at[slot].set(s[0]) if d.ndim == 1 else cp(d, s),
+            self.cache, cache1)
+
+    # ---- decode ----
+    def step(self) -> None:
+        self._admit()
+        if not self.active:
+            return
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(self.params, self.last_tokens,
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self._stats["decode_s"] += time.perf_counter() - t0
+        self._stats["decode_steps"] += 1
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self._stats["tokens_out"] += 1
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                del self.active[slot]
+            else:
+                self.last_tokens = self.last_tokens.at[slot, 0].set(tok)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return dict(self._stats)

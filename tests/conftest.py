@@ -1,0 +1,13 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs exclusively to launch/dryrun.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,156 @@
+"""Checkpointing (atomicity, keep-k, reshard-on-restore) and the fault-
+tolerance state machine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.runtime.fault import (ElasticPlan, HeartbeatFile,
+                                 HeartbeatMonitor, RestartPolicy)
+
+
+@pytest.fixture
+def tree(rng):
+    return {"a": jax.random.normal(rng, (8, 4)),
+            "nested": {"b": jnp.arange(6).reshape(2, 3),
+                       "scales": (jnp.float32(0.5), jnp.int32(3))}}
+
+
+class TestCheckpointer:
+    def test_roundtrip(self, tmp_path, tree):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(10, tree, {"step": 10, "data": {"step": 99}})
+        restored, extra = ck.restore(tree)
+        assert extra["step"] == 10 and extra["data"]["step"] == 99
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_keep_k_gc(self, tmp_path, tree):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, tree, {})
+        assert ck.list_steps() == [3, 4]
+
+    def test_latest_and_explicit_step(self, tmp_path, tree):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, jax.tree.map(lambda x: x * 0, tree), {})
+        ck.save(2, tree, {})
+        r1, _ = ck.restore(tree, step=1)
+        assert float(jnp.sum(jnp.abs(r1["a"]))) == 0.0
+        assert ck.latest_step() == 2
+
+    def test_async_save(self, tmp_path, tree):
+        ck = Checkpointer(str(tmp_path))
+        ck.save_async(5, tree, {"step": 5})
+        ck.wait()
+        assert ck.latest_step() == 5
+
+    def test_torn_write_ignored(self, tmp_path, tree):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, tree, {})
+        os.makedirs(tmp_path / "step_0000000002.tmp")  # crashed writer
+        assert ck.latest_step() == 1
+
+    def test_restore_with_sharding_fn(self, tmp_path, tree):
+        """Elastic restore: every leaf re-placed via sharding_fn."""
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, tree, {})
+        from jax.sharding import SingleDeviceSharding
+        sh = SingleDeviceSharding(jax.devices()[0])
+        calls = []
+
+        def sharding_fn(key):
+            calls.append(key)
+            return sh
+
+        restored, _ = ck.restore(tree, sharding_fn=sharding_fn)
+        assert len(calls) == len(jax.tree.leaves(tree))
+        assert restored["a"].sharding == sh
+
+    def test_missing_key_raises(self, tmp_path, tree):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, {"a": tree["a"]}, {})
+        with pytest.raises(KeyError):
+            ck.restore(tree)
+
+
+class TestFaultMachinery:
+    def test_straggler_detection(self):
+        mon = HeartbeatMonitor(n_workers=4)
+        for w in range(4):
+            mon.beat(w, step_time=1.0 if w != 2 else 5.0, now=100.0)
+        assert mon.stragglers() == [2]
+        assert mon.healthy_quorum(now=100.0) == [0, 1, 3]
+
+    def test_dead_detection(self):
+        mon = HeartbeatMonitor(n_workers=3, timeout_s=10.0)
+        mon.beat(0, 1.0, now=0.0)
+        mon.beat(1, 1.0, now=0.0)
+        # worker 2 never beats; workers 0,1 beat recently at t=5
+        mon.beat(0, 1.0, now=5.0)
+        mon.beat(1, 1.0, now=5.0)
+        assert mon.dead(now=6.0) == [2]
+        assert mon.dead(now=100.0) == [0, 1, 2]
+
+    def test_restart_policy_backoff_and_budget(self):
+        rp = RestartPolicy(max_restarts=3, backoff_base_s=1.0)
+        delays = [rp.next_delay() for _ in range(4)]
+        assert delays[:3] == [1.0, 2.0, 4.0] and delays[3] is None
+        rp2 = RestartPolicy(max_restarts=2)
+        rp2.next_delay()
+        rp2.record_success(steps_since_restart=500)
+        assert rp2.restarts == 0        # budget resets after stability
+
+    def test_elastic_shrink(self):
+        plan = ElasticPlan(data_axis=16, model_axis=16)
+        assert plan.shrink_for(512) == (16, 16)
+        assert plan.shrink_for(255) == (8, 16)
+        assert plan.shrink_for(100) == (4, 16)
+        assert plan.shrink_for(10) is None   # can't break a TP group
+
+    def test_heartbeat_file_roundtrip(self, tmp_path):
+        hb = HeartbeatFile(str(tmp_path), worker=3)
+        hb.write(step=7, step_time=1.25)
+        all_hb = HeartbeatFile.read_all(str(tmp_path))
+        assert all_hb[3]["step"] == 7
+        assert abs(all_hb[3]["step_time"] - 1.25) < 1e-9
+
+
+class TestTrainRestartIntegration:
+    @pytest.mark.slow
+    def test_crash_resume_continues(self, tmp_path):
+        """Kill training mid-run; resume completes from the checkpoint."""
+        import subprocess
+        import sys
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+        base = [sys.executable, "-m", "repro.launch.train",
+                "--arch", "xlstm-125m", "--steps", "202",
+                "--teacher-steps", "3", "--batch-size", "2",
+                "--seq-len", "32", "--ckpt-dir", str(tmp_path)]
+        p1 = subprocess.run(base + ["--simulate-failure-at", "150"],
+                            env=env, capture_output=True, text=True,
+                            timeout=560)
+        assert p1.returncode == 42      # simulated crash
+        p2 = subprocess.run(base + ["--resume"], env=env,
+                            capture_output=True, text=True, timeout=560)
+        assert p2.returncode == 0, p2.stdout + p2.stderr
+        assert "resumed from step" in p2.stdout
+
+
+def test_bf16_roundtrip(tmp_path):
+    """npz cannot store ml_dtypes natively; the dtype-recorded uint view
+    must round-trip bfloat16 exactly."""
+    import jax.numpy as jnp
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(8, dtype=jnp.bfloat16) * 0.25,
+            "s": jnp.float32(2.0)}
+    ck.save(1, tree, {})
+    r, _ = ck.restore(tree)
+    assert r["w"].dtype == np.asarray(tree["w"]).dtype
+    np.testing.assert_array_equal(np.asarray(r["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))

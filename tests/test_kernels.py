@@ -1,0 +1,177 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import lsq_fake_quant, pack_int4
+from repro.kernels.kvq_attn.ops import kvq_decode_attn
+from repro.kernels.kvq_attn.ref import kvq_decode_attn_ref
+from repro.kernels.quant.ops import pallas_lsq_fake_quant
+from repro.kernels.w4a8.ops import w4a8_linear, w4a8_matmul
+from repro.kernels.w4a8.ref import w4a8_matmul_ref
+
+
+class TestQuantKernel:
+    @pytest.mark.parametrize("shape,per_channel", [
+        ((256, 512), False), ((256, 512), True),
+        ((300, 700), False), ((300, 700), True),      # non-tile-aligned
+        ((7, 96), True), ((4, 64, 48), False),        # small + 3-D
+    ])
+    @pytest.mark.parametrize("bits", [4, 8, 16])
+    def test_matches_oracle(self, shape, per_channel, bits, rng):
+        x = jax.random.normal(rng, shape) * 3
+        if per_channel:
+            s = jnp.abs(jax.random.normal(rng, (shape[-1],))) * 0.1 + 0.02
+            s_ref = s.reshape((1,) * (len(shape) - 1) + (-1,))
+        else:
+            s = jnp.float32(0.07)
+            s_ref = s
+        yk = pallas_lsq_fake_quant(x, s, bits)
+        yr = lsq_fake_quant(x, s_ref, bits)
+        np.testing.assert_allclose(yk, yr, atol=1e-6)
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_gradients_match_oracle(self, bits, rng):
+        x = jax.random.normal(rng, (300, 260)) * 2
+        s = jnp.abs(jax.random.normal(rng, (260,))) * 0.05 + 0.01
+
+        def loss_k(x, s):
+            return jnp.sum(jnp.sin(pallas_lsq_fake_quant(x, s, bits)))
+
+        def loss_r(x, s):
+            return jnp.sum(jnp.sin(lsq_fake_quant(x, s.reshape(1, -1),
+                                                  bits)))
+
+        gk = jax.grad(loss_k, argnums=(0, 1))(x, s)
+        gr = jax.grad(loss_r, argnums=(0, 1))(x, s)
+        np.testing.assert_allclose(gk[0], gr[0], atol=1e-5)
+        np.testing.assert_allclose(gk[1], gr[1].reshape(-1), atol=1e-4,
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype, rng):
+        x = (jax.random.normal(rng, (64, 128)) * 2).astype(dtype)
+        y = pallas_lsq_fake_quant(x, jnp.float32(0.1), 8)
+        assert y.dtype == dtype
+        yr = lsq_fake_quant(x, jnp.float32(0.1), 8)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), atol=1e-6)
+
+
+class TestW4A8Kernel:
+    @pytest.mark.parametrize("mkn", [(64, 128, 96), (256, 512, 256),
+                                     (300, 1024, 257), (7, 512, 512),
+                                     (1, 128, 64)])
+    def test_matches_oracle(self, mkn, rng):
+        M, K, N = mkn
+        ks = jax.random.split(rng, 4)
+        x_q = jax.random.randint(ks[0], (M, K), -128, 128, jnp.int8)
+        w_q = jax.random.randint(ks[1], (N, K), -8, 8, jnp.int8)
+        wp = pack_int4(w_q)
+        s_x = jnp.abs(jax.random.normal(ks[2], (M, 1))) * 0.01 + 1e-3
+        s_w = jnp.abs(jax.random.normal(ks[3], (N,))) * 0.01 + 1e-3
+        b = jax.random.normal(ks[3], (N,))
+        out = w4a8_matmul(x_q, wp, s_x, s_w, b)
+        ref = w4a8_matmul_ref(x_q, wp, s_x, s_w, b)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_deployed_linear_matches_fake_quant(self, rng):
+        """End-to-end: exported int4 path ~= fake-quant training path."""
+        from repro.core.calibration import mse_weight_scale
+        from repro.core.qat import export_linear_int, init_linear, make_ctx, \
+            qlinear
+        p = init_linear(rng, 256, 128, bias=True)
+        p["s_w"] = mse_weight_scale(p["w"], 4)
+        exp = export_linear_int(p, 4)
+        x = jax.random.normal(rng, (5, 256), jnp.bfloat16)
+        y_deploy = w4a8_linear(x, exp)
+        y_fake = qlinear(make_ctx("A8d-C8-W4"), x, p)
+        err = float(jnp.mean(jnp.abs(y_deploy.astype(jnp.float32)
+                                     - y_fake.astype(jnp.float32))))
+        scale = float(jnp.mean(jnp.abs(y_fake.astype(jnp.float32)))) + 1e-9
+        assert err / scale < 0.02
+
+
+class TestKVQAttnKernel:
+    @pytest.mark.parametrize("dims", [
+        (2, 8, 2, 1024, 128),    # GQA
+        (1, 4, 4, 700, 128),     # MHA, ragged S
+        (3, 6, 2, 512, 256),     # wide head
+        (2, 4, 1, 513, 128),     # MQA, S % BS != 0
+    ])
+    def test_matches_oracle(self, dims, rng):
+        B, H, Hkv, S, D = dims
+        ks = jax.random.split(rng, 6)
+        q = jax.random.normal(ks[0], (B, H, D))
+        k_q = jax.random.randint(ks[1], (B, Hkv, S, D), -128, 128, jnp.int8)
+        v_q = jax.random.randint(ks[2], (B, Hkv, S, D), -128, 128, jnp.int8)
+        s_k = jnp.abs(jax.random.normal(ks[3], (B, Hkv, S))) * 0.01 + 1e-3
+        s_v = jnp.abs(jax.random.normal(ks[4], (B, Hkv, S))) * 0.01 + 1e-3
+        lengths = jax.random.randint(ks[5], (B,), 1, S + 1, jnp.int32)
+        out = kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths)
+        ref = kvq_decode_attn_ref(q, k_q, v_q, s_k, s_v, lengths)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=2e-5, rtol=2e-4)
+
+    def test_length_one(self, rng):
+        """Minimal valid prefix: attends to exactly one token."""
+        B, H, Hkv, S, D = 1, 2, 1, 512, 128
+        ks = jax.random.split(rng, 4)
+        q = jax.random.normal(ks[0], (B, H, D))
+        k_q = jax.random.randint(ks[1], (B, Hkv, S, D), -128, 128, jnp.int8)
+        v_q = jax.random.randint(ks[2], (B, Hkv, S, D), -128, 128, jnp.int8)
+        s = jnp.full((B, Hkv, S), 0.01)
+        out = kvq_decode_attn(q, k_q, v_q, s, s, jnp.array([1]))
+        expect = (v_q[:, :, 0].astype(jnp.float32) * 0.01)
+        expect = jnp.repeat(expect, H // Hkv, axis=1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=1e-5)
+
+
+class TestFlashAttnKernel:
+    @pytest.mark.parametrize("dims", [
+        (1, 512, 4, 2, 128, True, 0),     # GQA causal
+        (2, 300, 8, 2, 128, True, 0),     # ragged S
+        (1, 700, 4, 4, 128, False, 0),    # MHA bidirectional (encoder)
+        (1, 600, 4, 1, 128, True, 128),   # MQA sliding window
+        (2, 256, 2, 2, 256, True, 0),     # wide head
+    ])
+    def test_matches_oracle(self, dims, rng):
+        from repro.kernels.flash_attn.ops import flash_attention
+        from repro.kernels.flash_attn.ref import flash_attn_ref
+        B, S, H, Hkv, D, causal, window = dims
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, Hkv, D))
+        v = jax.random.normal(ks[2], (B, S, Hkv, D))
+        out = flash_attention(q, k, v, causal=causal, window=window)
+        ref = flash_attn_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-2, rtol=2e-2)
+
+
+class TestSLSTMScanKernel:
+    @pytest.mark.parametrize("dims", [(8, 256, 128), (3, 100, 128),
+                                      (8, 128, 256)])
+    def test_matches_oracle(self, dims, rng):
+        from repro.kernels.slstm_scan.ops import slstm_scan
+        from repro.kernels.slstm_scan.ref import slstm_scan_ref
+        B, T, d = dims
+        ks = jax.random.split(rng, 4)
+        gx = jax.random.normal(ks[0], (B, T, 4 * d)) * 0.5
+        r_h = jax.random.normal(ks[1], (d, 4 * d)) * (d ** -0.5)
+        h0 = jax.random.normal(ks[2], (B, d)) * 0.1
+        c0 = jax.random.normal(ks[3], (B, d)) * 0.1
+        hs, hT, cT = slstm_scan(gx, r_h, h0, c0)
+        hs_r, hT_r, cT_r = slstm_scan_ref(gx, r_h, h0, c0)
+        np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_r),
+                                   atol=3e-5)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_r),
+                                   atol=3e-5)
+        np.testing.assert_allclose(np.asarray(cT), np.asarray(cT_r),
+                                   atol=3e-5)

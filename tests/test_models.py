@@ -1,0 +1,145 @@
+"""Model correctness: blockwise attention vs dense, decode-vs-forward
+consistency, recurrent chunked-vs-sequential equivalence, collector/scan
+plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.qat import make_ctx
+from repro.models import decode_step, forward, init_params, prefill
+from repro.models.common import blockwise_attention
+from repro.models.model import segment_plan
+
+
+def _dense_attn(q, k, v, causal=True, window=0):
+    B, S, H, D = q.shape
+    g = H // k.shape[2]
+    kr = jnp.repeat(k, g, 2)
+    vr = jnp.repeat(v, g, 2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / jnp.sqrt(D)
+    i = jnp.arange(S)
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= i[:, None] >= i[None, :]
+    if window:
+        m &= i[:, None] - i[None, :] < window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+
+@pytest.mark.parametrize("causal,window,qc,kc", [
+    (True, 0, 64, 64), (True, 0, 37, 51), (False, 0, 64, 64),
+    (True, 50, 64, 64), (True, 16, 32, 32)])
+def test_blockwise_attention_matches_dense(causal, window, qc, kc, rng):
+    B, S, H, Hkv, D = 2, 200, 8, 2, 32
+    q = jax.random.normal(rng, (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D))
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=qc, kv_chunk=kc, p_dtype=jnp.float32)
+    ref = _dense_attn(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+    # production path: bf16 probability tensor (TPU flash-kernel precision)
+    out16 = blockwise_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out16), np.asarray(ref),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "recurrentgemma-2b",
+                                  "xlstm-125m", "mixtral-8x7b"])
+def test_decode_matches_teacher_forcing(arch, rng, monkeypatch):
+    """Greedy decode over the quantized cache must match positions computed
+    by the parallel forward (same fake-quant policy, full-precision cache
+    policy C16 so cache round-trip noise can't mask a logic bug)."""
+    # capacity-dropping makes MoE prefix-inconsistent by design; give the
+    # dispatch unbounded capacity for this logic test
+    from repro.models import blocks as _blocks
+    monkeypatch.setattr(_blocks, "MOE_CAPACITY_FACTOR", 100.0)
+    cfg = get_reduced_config(arch)
+    params = init_params(cfg, rng, dtype=jnp.float32)
+    ctx = make_ctx("A16-C16-W16", mode="off")   # logic test, not noise test
+    B, S = 1, 24
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    logits_all, _ = forward(cfg, params, ctx, {"tokens": tokens})
+    # prefill on the first S-4 tokens, decode the next 4 teacher-forced
+    split = S - 4
+    lg_p, cache = prefill(cfg, params, ctx, {"tokens": tokens[:, :split]},
+                          cache_budget=S + 4)
+    np.testing.assert_allclose(np.asarray(lg_p[:, 0]),
+                               np.asarray(logits_all[:, split - 1]),
+                               atol=2e-2, rtol=2e-2)
+    for t in range(split, S):
+        lg_d, cache = decode_step(cfg, params, ctx, tokens[:, t:t + 1],
+                                  cache)
+        np.testing.assert_allclose(np.asarray(lg_d[:, 0]),
+                                   np.asarray(logits_all[:, t]),
+                                   atol=2e-2, rtol=2e-2)
+
+
+def test_segment_plan_remainders():
+    cfg = get_reduced_config("recurrentgemma-2b")   # 3 layers, pattern RRA
+    plan = segment_plan(cfg)
+    assert plan == [(("rglru", "rglru", "local_attn"), 1)]
+    cfg26 = cfg.replace(n_layers=26)
+    plan = segment_plan(cfg26)
+    assert plan[0] == (("rglru", "rglru", "local_attn"), 8)
+    assert plan[1] == (("rglru", "rglru"), 1)
+    assert sum(len(k) * r for k, r in plan) == 26
+
+
+def test_calib_collector_structure_matches_layers(rng):
+    """Stats stack along the scan axis: leading dim == segment repeat."""
+    cfg = get_reduced_config("qwen3-14b").replace(n_layers=4)
+    params = init_params(cfg, rng)
+    ctx = make_ctx("A8s-C8-W4", mode="calib")
+    batch = {"tokens": jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)}
+    _, aux = forward(cfg, params, ctx, batch, collect_stats=True)
+    st = aux["qstats"]["segments"][0]["0"]
+    assert st["attn"]["wq"]["s_in"].shape == (4,)
+    assert st["attn"]["s_q"].shape == (4,)
+
+
+def test_remat_preserves_values(rng):
+    cfg = get_reduced_config("qwen2.5-3b")
+    params = init_params(cfg, rng, dtype=jnp.float32)
+    ctx = make_ctx("A8d-C8-W4")
+    batch = {"tokens": jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)}
+    l0, _ = forward(cfg, params, ctx, batch, remat=False)
+    l1, _ = forward(cfg, params, ctx, batch, remat=True)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-5)
+
+
+def test_vlm_mrope_text_equivalence(rng):
+    """With all three position streams equal, M-RoPE == standard RoPE, so a
+    VLM forward on pure text must match the same model without mrope."""
+    cfg = get_reduced_config("qwen2-vl-2b").replace(vision_tokens=0)
+    params = init_params(cfg, rng, dtype=jnp.float32)
+    ctx = make_ctx("A16-C16-W16", mode="off")
+    B, S = 2, 16
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    pos = jnp.tile(jnp.arange(S), (3, B, 1))
+    l_mrope, _ = forward(cfg, params, ctx,
+                         {"tokens": tokens, "positions": pos})
+    cfg_std = cfg.replace(mrope=False)
+    l_std, _ = forward(cfg_std, params, ctx, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(l_mrope), np.asarray(l_std),
+                               atol=1e-4)
+
+
+def test_whisper_uses_encoder(rng):
+    """Decoder logits must depend on the encoder frames (cross-attention)."""
+    cfg = get_reduced_config("whisper-large-v3")
+    params = init_params(cfg, rng, dtype=jnp.float32)
+    ctx = make_ctx("A16-C16-W16", mode="off")
+    tokens = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    f1 = jax.random.normal(rng, (1, cfg.encoder_seq, cfg.d_model))
+    # note: a constant frame offset would be annihilated by LayerNorm; use
+    # independent content
+    f2 = jax.random.normal(jax.random.PRNGKey(99), f1.shape)
+    l1, _ = forward(cfg, params, ctx, {"tokens": tokens, "frames": f1})
+    l2, _ = forward(cfg, params, ctx, {"tokens": tokens, "frames": f2})
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-3

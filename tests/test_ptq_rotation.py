@@ -1,0 +1,116 @@
+"""PTQ baselines (RTN, SmoothQuant) + rotation machinery + Procrustes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.analysis.rotation import (procrustes_distances,
+                                          random_rotation, rotate_residual,
+                                          rotation_report)
+from repro.core.precision import parse_policy
+from repro.core.ptq.rtn import rtn_quantize
+from repro.core.ptq.smoothquant import fold_smoothing, smoothquant_quantize
+from repro.core.qat import make_ctx
+from repro.data import SyntheticConfig, calibration_batches
+from repro.models import forward, init_params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced_config("qwen3-14b")
+    params = init_params(jax.random.PRNGKey(0), None) \
+        if False else init_params(cfg, jax.random.PRNGKey(0),
+                                  dtype=jnp.float32)
+    dc = SyntheticConfig(vocab_size=cfg.vocab_size, seq_len=32, batch_size=4)
+    cb = calibration_batches(dc, 2)
+    batch = {"tokens": jnp.asarray(cb[0]["tokens"])}
+    return cfg, params, cb, batch
+
+
+class TestRotation:
+    def test_function_preserving(self, setup):
+        cfg, params, _, batch = setup
+        ctx = make_ctx("A16-C16-W16", mode="off")
+        l0, _ = forward(cfg, params, ctx, batch)
+        rot = rotate_residual(cfg, params, jax.random.PRNGKey(7))
+        l1, _ = forward(cfg, rot, ctx, batch)
+        # tolerance: the attention probability tensor is bf16 (production
+        # precision), and rotated activations round differently in bf16
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   atol=5e-3)
+
+    def test_rotation_matrix_orthonormal(self):
+        R = random_rotation(32, jax.random.PRNGKey(0))
+        np.testing.assert_allclose(np.asarray(R @ R.T), np.eye(32),
+                                   atol=1e-5)
+
+    def test_procrustes_pure_rotation(self, rng):
+        W = np.asarray(jax.random.normal(rng, (48, 32)))
+        R = np.asarray(random_rotation(48, jax.random.PRNGKey(1)))
+        d = procrustes_distances(W, R @ W)
+        assert d["non_rotational"] < 1e-4
+        assert d["rotational"] > 0.1
+
+    def test_procrustes_identity(self, rng):
+        W = np.asarray(jax.random.normal(rng, (32, 32)))
+        d = procrustes_distances(W, W)
+        assert d["total"] < 1e-6
+
+    def test_rotation_report_separates_qat_from_rotation(self, setup, rng):
+        """The paper's Fig-3 mechanism: a rotated model shows high
+        rotational share; a randomly perturbed model much lower."""
+        cfg, params, _, _ = setup
+        rot = rotate_residual(cfg, params, jax.random.PRNGKey(3))
+        rep_rot = rotation_report(cfg, params, rot)
+        perturbed = jax.tree.map(
+            lambda x: x + 0.05 * jnp.std(x) *
+            jax.random.normal(rng, x.shape, x.dtype)
+            if x.ndim >= 2 else x, params)
+        rep_pert = rotation_report(cfg, params, perturbed)
+
+        def share(rep):
+            tot = sum(v["rotational"] + v["non_rotational"]
+                      for v in rep.values())
+            return sum(v["rotational"] for v in rep.values()) / tot
+
+        assert share(rep_rot) > 0.8
+        assert share(rep_pert) < 0.5
+
+
+class TestPTQ:
+    def test_rtn_improves_with_bits(self, setup):
+        cfg, params, cb, batch = setup
+        ctx_off = make_ctx("A16-C16-W16", mode="off")
+        l0, _ = forward(cfg, params, ctx_off, batch)
+
+        def agreement(policy_name):
+            pol = parse_policy(policy_name)
+            q = rtn_quantize(cfg, params, pol, cb)
+            lq, _ = forward(cfg, q, make_ctx(pol), batch)
+            return float(jnp.mean(jnp.argmax(lq, -1) == jnp.argmax(l0, -1)))
+
+        a4 = agreement("A8s-C8-W4")
+        a8 = agreement("A8s-C8-W8")
+        assert a8 >= a4
+
+    def test_smoothquant_finite_and_scales_folded(self, setup):
+        cfg, params, cb, batch = setup
+        folded = fold_smoothing(cfg, params, 0.5, cb)
+        # function preserved before quantization (norm/linear fold identity)
+        ctx_off = make_ctx("A16-C16-W16", mode="off")
+        l0, _ = forward(cfg, params, ctx_off, batch)
+        l1, _ = forward(cfg, folded, ctx_off, batch)
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   rtol=2e-2, atol=2e-2)
+        # weights actually changed
+        w0 = params["segments"][0]["0"]["attn"]["wq"]["w"]
+        w1 = folded["segments"][0]["0"]["attn"]["wq"]["w"]
+        assert bool(jnp.any(jnp.abs(w0 - w1) > 1e-6))
+
+    def test_smoothquant_pipeline_runs(self, setup):
+        cfg, params, cb, batch = setup
+        pol = parse_policy("A8s-C8-W4")
+        q = smoothquant_quantize(cfg, params, pol, cb, alpha=0.4)
+        lq, _ = forward(cfg, q, make_ctx(pol), batch)
+        assert bool(jnp.all(jnp.isfinite(lq)))

@@ -1,0 +1,126 @@
+"""Unit + property tests for the SiLQ quantizers (core/quantizer.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantizer import (dequantize_int, dynamic_fake_quant,
+                                  dynamic_quantize_to_int, lsq_fake_quant,
+                                  pack_int4, qbounds, quantize_to_int,
+                                  round_ste, unpack_int4)
+
+
+def test_qbounds():
+    assert qbounds(4) == (-8, 7)
+    assert qbounds(8) == (-128, 127)
+    assert qbounds(16) == (-32768, 32767)
+
+
+def test_round_ste_gradient_is_identity():
+    x = jnp.linspace(-3, 3, 31)
+    g = jax.grad(lambda x: jnp.sum(round_ste(x) * 2))(x)
+    np.testing.assert_allclose(g, 2.0 * np.ones_like(x))
+
+
+class TestLSQ:
+    def test_idempotent(self, rng):
+        """Quantizing a quantized tensor is the identity."""
+        x = jax.random.normal(rng, (64, 32))
+        s = jnp.float32(0.1)
+        y = lsq_fake_quant(x, s, 8)
+        y2 = lsq_fake_quant(y, s, 8)
+        np.testing.assert_allclose(y, y2, atol=1e-6)
+
+    def test_error_bounded_by_half_step(self, rng):
+        x = jax.random.normal(rng, (128,)) * 0.5
+        s = jnp.float32(0.01)
+        y = lsq_fake_quant(x, s, 16)    # wide range: no clipping
+        assert float(jnp.max(jnp.abs(y - x))) <= 0.005 + 1e-6
+
+    def test_clipping(self):
+        x = jnp.array([100.0, -100.0])
+        s = jnp.float32(1.0)
+        y = lsq_fake_quant(x, s, 4)
+        np.testing.assert_allclose(y, [7.0, -8.0])
+
+    def test_grad_zero_outside_range(self):
+        x = jnp.array([100.0, 0.5, -100.0])
+        g = jax.grad(lambda x: jnp.sum(lsq_fake_quant(x, jnp.float32(1.0),
+                                                      4)))(x)
+        np.testing.assert_allclose(g, [0.0, 1.0, 0.0])
+
+    def test_scale_gradient_signs(self):
+        """LSQ: clipped-high values push ds positive via b_u term."""
+        s = jnp.float32(1.0)
+        ds_hi = jax.grad(lambda s: jnp.sum(lsq_fake_quant(
+            jnp.array([100.0]), s, 4)), argnums=0)(s)
+        assert float(ds_hi) > 0          # growing s recovers clipped mass
+        ds_lo = jax.grad(lambda s: jnp.sum(lsq_fake_quant(
+            jnp.array([-100.0]), s, 4)), argnums=0)(s)
+        assert float(ds_lo) < 0
+
+    def test_per_channel(self, rng):
+        x = jax.random.normal(rng, (16, 8))
+        s = jnp.abs(jax.random.normal(rng, (1, 8))) * 0.1 + 0.01
+        y = lsq_fake_quant(x, s, 8)
+        for c in range(8):
+            yc = lsq_fake_quant(x[:, c], s[0, c], 8)
+            np.testing.assert_allclose(y[:, c], yc, atol=1e-6)
+
+    @given(bits=st.sampled_from([4, 8, 16]),
+           scale=st.floats(1e-4, 10.0),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_output_on_grid(self, bits, scale, seed):
+        """Property: outputs are exact integer multiples of s, in range."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3
+        s = jnp.float32(scale)
+        y = np.asarray(lsq_fake_quant(x, s, bits), np.float64)
+        q = y / scale
+        qn, qp = qbounds(bits)
+        tol = 1e-3 * np.maximum(1.0, np.abs(q))   # fp32 product round-off
+        assert np.all(np.abs(q - np.round(q)) < tol)
+        assert q.min() >= qn - 0.1 and q.max() <= qp + 0.1
+
+
+class TestDynamic:
+    @given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_error_bound(self, bits, seed):
+        """Property: per-token error <= absmax/(2^{b-1}-1)/2 per token."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+        y = dynamic_fake_quant(x, bits)
+        _, qp = qbounds(bits)
+        bound = np.asarray(jnp.max(jnp.abs(x), -1)) / qp / 2 + 1e-6
+        err = np.asarray(jnp.max(jnp.abs(y - x), -1))
+        assert np.all(err <= bound)
+
+    def test_scale_no_gradient(self, rng):
+        """Dynamic scale is stop-gradiented; data grad is STE-identity."""
+        x = jax.random.normal(rng, (4, 16))
+        g = jax.grad(lambda x: jnp.sum(dynamic_fake_quant(x, 8)))(x)
+        np.testing.assert_allclose(g, np.ones_like(g))
+
+
+class TestIntConversion:
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_pack_unpack_roundtrip(self, seed):
+        q = jax.random.randint(jax.random.PRNGKey(seed), (6, 16), -8, 8,
+                               jnp.int8)
+        assert bool(jnp.all(unpack_int4(pack_int4(q)) == q))
+
+    def test_quant_dequant_matches_fake_quant(self, rng):
+        x = jax.random.normal(rng, (32, 16))
+        s = jnp.float32(0.05)
+        real = dequantize_int(quantize_to_int(x, s, 8), s, jnp.float32)
+        fake = lsq_fake_quant(x, s, 8)
+        np.testing.assert_allclose(real, fake, atol=1e-6)
+
+    def test_dynamic_int_roundtrip(self, rng):
+        x = jax.random.normal(rng, (8, 64))
+        q, s = dynamic_quantize_to_int(x, 8)
+        err = jnp.abs(q.astype(jnp.float32) * s - x)
+        assert float(jnp.max(err)) <= float(jnp.max(s)) / 2 + 1e-6
