@@ -1,0 +1,195 @@
+"""Serving throughput benchmark: seed (v1) engine vs. continuous-batching v2.
+
+Measures tok/s, TTFT p50/p95, and decode-step latency on the reduced config
+and writes ``BENCH_serve.json`` so the perf trajectory has serving numbers.
+
+The baseline is a faithful reimplementation of the seed ``ServeEngine``
+(per-request compiled prefill, per-token ``int(jnp.argmax(...))`` host sync)
+driven by the *same* model functions, so the delta isolates the engine
+architecture: batched prefill + on-device decode chunks.
+
+Both engines get one untimed warmup pass over the identical workload so
+compile time is excluded from the comparison.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.core.qat import make_ctx
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import percentile
+
+
+class BaselineEngine:
+    """Seed (v1) serve loop: slot batching, but per-request prefill and a
+    host sync on every decode step — the architecture v2 replaces."""
+
+    def __init__(self, cfg, params, *, policy: str = "A8d-C8-W4",
+                 slots: int = 8, cache_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = make_ctx(policy)
+        self.slots = slots
+        self.cache_len = cache_len
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, self.ctx, t, c))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, self.ctx, b,
+                                 cache_budget=cache_len))
+        self.reset()
+
+    def reset(self):
+        self.cache = init_cache(self.cfg, self.ctx, self.slots,
+                                self.cache_len)
+        self.active: Dict[int, Request] = {}
+        self.queue: List[Request] = []
+        self.last_tokens = jnp.zeros((self.slots, 1), jnp.int32)
+        self.submit_t: Dict[int, float] = {}
+        self.ttfts: List[float] = []
+        self.stats = {"tokens_out": 0, "decode_steps": 0, "decode_s": 0.0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.submit_t[req.uid] = time.perf_counter()
+
+    def _write_slot(self, slot: int, cache1):
+        def cp(dst, src):
+            if dst.ndim == 1:
+                return dst.at[slot].set(src[0])
+            return dst.at[:, slot].set(src[:, 0])
+        self.cache = jax.tree.map(cp, self.cache, cache1)
+
+    def _admit(self):
+        for slot in [s for s in range(self.slots) if s not in self.active]:
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+            logits, cache1 = self._prefill(self.params, batch)
+            first = int(jnp.argmax(logits[0, -1]))          # host sync
+            req.generated.append(first)
+            self.stats["tokens_out"] += 1
+            self.ttfts.append(time.perf_counter() - self.submit_t[req.uid])
+            self._write_slot(slot, cache1)
+            self.last_tokens = self.last_tokens.at[slot, 0].set(first)
+            self.active[slot] = req
+
+    def step(self):
+        self._admit()
+        if not self.active:
+            return
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(self.params, self.last_tokens,
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))  # host sync
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.stats["tokens_out"] += 1
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                del self.active[slot]
+            else:
+                self.last_tokens = self.last_tokens.at[slot, 0].set(tok)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        out = dict(self.stats)
+        out["ttft_p50_s"] = percentile(self.ttfts, 50)
+        out["ttft_p95_s"] = percentile(self.ttfts, 95)
+        out["decode_step_s"] = (out["decode_s"]
+                                / max(out["decode_steps"], 1))
+        return out
+
+
+def make_requests(args, cfg) -> List[Request]:
+    rng = np.random.default_rng(0)
+    return [Request(uid=uid,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for uid in range(args.requests)]
+
+
+def run_engine(engine, reqs) -> Dict:
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    stats = engine.run_until_drained()
+    wall = time.perf_counter() - t0
+    stats["wall_s"] = wall
+    stats["tok_s"] = stats["tokens_out"] / max(wall, 1e-9)
+    return stats
+
+
+def timed(engine_factory, args, cfg) -> Dict:
+    engine = engine_factory()
+    run_engine(engine, make_requests(args, cfg))     # warmup: compiles
+    engine.reset()
+    return run_engine(engine, make_requests(args, cfg))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--policy", default="A8d-C8-W4")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--decode-block", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI workload (fewer/shorter requests)")
+    ap.add_argument("--skip-baseline", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.slots = 6, 2
+        args.prompt_len, args.max_new, args.cache_len = 16, 8, 64
+
+    cfg = get_reduced_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    result = {"args": vars(args)}
+    if not args.skip_baseline:
+        base = timed(lambda: BaselineEngine(
+            cfg, params, policy=args.policy, slots=args.slots,
+            cache_len=args.cache_len), args, cfg)
+        result["seed"] = base
+        print(f"seed v1: {base['tok_s']:.1f} tok/s, "
+              f"{base['decode_step_s'] * 1e3:.1f} ms/decode-step, "
+              f"TTFT p50 {base['ttft_p50_s'] * 1e3:.0f} ms")
+    v2 = timed(lambda: ServeEngine(
+        cfg, params, policy=args.policy, slots=args.slots,
+        cache_len=args.cache_len, decode_block=args.decode_block,
+        max_new_cap=max(32, args.max_new)), args, cfg)
+    result["v2"] = v2
+    print(f"v2:      {v2['tok_s']:.1f} tok/s, "
+          f"{v2['decode_step_s'] * 1e3:.1f} ms/decode-step, "
+          f"TTFT p50 {v2['ttft_p50_s'] * 1e3:.0f} ms")
+    if "seed" in result:
+        result["speedup_tok_s"] = v2["tok_s"] / max(result["seed"]["tok_s"],
+                                                    1e-9)
+        print(f"speedup: {result['speedup_tok_s']:.2f}x")
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,13 @@
-"""Batched quantized serving driver.
+"""Batched quantized serving driver (continuous-batching engine v2).
 
 Loads (or initializes) a model, deploys it at the given precision, and runs
-a batch of synthetic requests through the slot-based ServeEngine
-(prefill -> continuous decode over the int8 cache).
+a batch of synthetic requests through the slot-based ServeEngine: batched
+length-bucketed prefill, fully on-device decode chunks, pluggable scheduler.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -17,6 +18,23 @@ from repro.models import init_params
 from repro.serve.engine import Request, ServeEngine
 
 
+def build_requests(args, cfg) -> list:
+    rng = np.random.default_rng(0)
+    reqs = []
+    for uid in range(args.requests):
+        plen = args.prompt_len
+        if args.vary_prompts:
+            plen = int(rng.integers(max(4, plen // 2), plen + 1))
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=args.max_new,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            seed=uid))
+    return reqs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -25,28 +43,43 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--vary-prompts", action="store_true",
+                    help="draw prompt lengths in [prompt_len/2, prompt_len]")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="decode steps per compiled on-device chunk")
+    ap.add_argument("--sched", default="fcfs", choices=("fcfs", "sjf"))
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--bench-out", default="",
+                    help="write the run's stats to this JSON file")
     args = ap.parse_args()
 
     cfg = (get_config if args.full else get_reduced_config)(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
-                         cache_len=args.cache_len)
-    rng = np.random.default_rng(0)
-    for uid in range(args.requests):
-        engine.submit(Request(
-            uid=uid,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new))
+                         cache_len=args.cache_len,
+                         decode_block=args.decode_block,
+                         sched_policy=args.sched,
+                         max_new_cap=max(32, args.max_new))
+    for req in build_requests(args, cfg):
+        engine.submit(req)
     t0 = time.perf_counter()
     stats = engine.run_until_drained()
     dt = time.perf_counter() - t0
+    stats["wall_s"] = dt
+    stats["tok_s"] = stats["tokens_out"] / max(dt, 1e-9)
     print(f"served {args.requests} requests in {dt:.2f}s: "
-          f"{stats['tokens_out']} tokens, "
-          f"{stats['tokens_out'] / max(dt, 1e-9):.1f} tok/s, "
-          f"{stats['decode_steps']} decode steps")
+          f"{stats['tokens_out']} tokens, {stats['tok_s']:.1f} tok/s, "
+          f"{stats['decode_steps']} decode steps "
+          f"({stats['decode_step_s'] * 1e3:.1f} ms/step), "
+          f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.0f} ms "
+          f"p95 {stats['ttft_p95_s'] * 1e3:.0f} ms")
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump({"args": vars(args), "stats": stats}, f, indent=2)
+        print(f"wrote {args.bench_out}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,20 @@ MOE_CAPACITY_FACTOR = 1.25
 MOE_CHUNK_S = 1024      # sequence-chunk for the dispatch working set
 
 
+def _decode_attn(q, k_q, v_q, s_k, s_v, lengths) -> jnp.ndarray:
+    """Decode attention over the int cache for a full slot batch.
+
+    On TPU this is the Pallas flash-decode kernel (int8 tiles dequantized
+    VMEM-locally, one grid row per slot); elsewhere the fused XLA path.
+    Both take the same batched (B, ...) operands, so the serve engine's
+    whole-slot decode step is backend-independent.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels.kvq_attn.ops import kvq_decode_attn
+        return kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths)
+    return decode_attention_intcache(q, k_q, v_q, s_k, s_v, lengths)
+
+
 # ==========================================================================
 # Dense MLPs
 # ==========================================================================
@@ -252,8 +266,16 @@ def quantize_kv_for_cache(ctx: QuantCtx, p: Dict, k: jnp.ndarray,
 
 def attn_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
                  rope, col=None, *, window: int = 0, cache_len: int = 0,
-                 enc_out: Optional[jnp.ndarray] = None):
-    """Like attn_fwd but also emits the quantized cache for serving."""
+                 enc_out: Optional[jnp.ndarray] = None,
+                 lengths: Optional[jnp.ndarray] = None):
+    """Like attn_fwd but also emits the quantized cache for serving.
+
+    ``lengths`` (B,) marks the valid (right-padded) prefix of each row:
+    pad-position K/V are dropped from the cache and ``cache["length"]``
+    tracks the true per-row length, so a single padded prefill call can
+    admit prompts of different lengths (causality keeps real-token outputs
+    independent of the padding).
+    """
     B, S, _ = x.shape
     xkv = enc_out if enc_out is not None else x
     q, k, v = _qkv(cfg, ctx, p, x, xkv, rope, col,
@@ -269,15 +291,26 @@ def attn_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
     if window:
         Sc = min(Sc, window)   # ring eviction enforces the sliding window
     cache = _blank_attn_cache(B, cfg, Sc, k_q.dtype)
-    Sw = min(S_in, Sc)
-    # token at absolute position p lives at ring slot p % Sc ("length" stays
-    # monotonic; decode masks with min(length, Sc))
-    slots = (jnp.arange(Sw) + (S_in - Sw)) % Sc
-    cache["k_q"] = cache["k_q"].at[:, :, slots].set(k_q[:, :, -Sw:])
-    cache["v_q"] = cache["v_q"].at[:, :, slots].set(v_q[:, :, -Sw:])
-    cache["s_k"] = cache["s_k"].at[:, :, slots].set(s_k[:, :, -Sw:])
-    cache["s_v"] = cache["s_v"].at[:, :, slots].set(s_v[:, :, -Sw:])
-    cache["length"] = jnp.full((B,), S_in, jnp.int32)
+    if lengths is None:
+        lengths = jnp.full((B,), S_in, jnp.int32)
+    # token at absolute position j lives at ring slot j % Sc ("length" stays
+    # monotonic; decode masks with min(length, Sc)). Per-row masked scatter:
+    # keep the last min(len, Sc) real tokens of each row, drop padding.
+    j = jnp.arange(S_in)[None]                       # (1, S_in)
+    valid = (j < lengths[:, None]) & (j >= lengths[:, None] - Sc)
+    dest = jnp.where(valid, j % Sc, Sc)              # Sc = out-of-range: drop
+    bidx = jnp.arange(B)[:, None]
+    # advanced-index semantics: result dims (B, S_in) lead, so values are
+    # (B, S_in, Hkv[, D]) = cache-layout tensors with S moved ahead of Hkv
+    cache["k_q"] = cache["k_q"].at[bidx, :, dest].set(
+        jnp.swapaxes(k_q, 1, 2), mode="drop")
+    cache["v_q"] = cache["v_q"].at[bidx, :, dest].set(
+        jnp.swapaxes(v_q, 1, 2), mode="drop")
+    cache["s_k"] = cache["s_k"].at[bidx, :, dest].set(
+        jnp.swapaxes(s_k, 1, 2), mode="drop")
+    cache["s_v"] = cache["s_v"].at[bidx, :, dest].set(
+        jnp.swapaxes(s_v, 1, 2), mode="drop")
+    cache["length"] = lengths.astype(jnp.int32)
     return y, cache
 
 
@@ -313,7 +346,7 @@ def attn_decode(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x1: jnp.ndarray,
     if cross:
         q = qlinear(ctx, x1, p["wq"]).reshape(B, 1, cfg.n_heads, hd)
         q = quantize_act(ctx, q, p, "s_q")
-        out = decode_attention_intcache(
+        out = _decode_attn(
             q[:, 0], cache["k_q"], cache["v_q"], cache["s_k"], cache["s_v"],
             cache["length"])
         y = qlinear(ctx, out.reshape(B, 1, cfg.q_dim)[:, 0], p["wo"])
@@ -332,7 +365,7 @@ def attn_decode(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x1: jnp.ndarray,
     new["s_k"] = cache["s_k"].at[bidx, :, slot].set(s_k1[:, :, 0])
     new["s_v"] = cache["s_v"].at[bidx, :, slot].set(s_v1[:, :, 0])
     new["length"] = cache["length"] + 1
-    out = decode_attention_intcache(
+    out = _decode_attn(
         q[:, 0], new["k_q"], new["v_q"], new["s_k"], new["s_v"],
         jnp.minimum(new["length"], Sc))
     y = qlinear(ctx, out.reshape(B, cfg.q_dim), p["wo"])

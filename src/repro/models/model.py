@@ -149,7 +149,8 @@ def _block_fwd(cfg, ctx, kind, p, x, consts, col, *, prefill=False):
         if prefill:
             a, cache_sa = B.attn_prefill(
                 cfg, ctx, p["attn"], h, consts["rope"], subcol(col, "attn"),
-                window=window, cache_len=consts.get("cache_len", 0))
+                window=window, cache_len=consts.get("cache_len", 0),
+                lengths=consts.get("lengths"))
             cache = {"self": cache_sa}
         else:
             a = B.attn_fwd(cfg, ctx, p["attn"], h, consts["rope"],
@@ -302,21 +303,40 @@ def prefill(cfg: ModelConfig, params: Dict, ctx: QuantCtx, batch: Dict,
     """Forward pass that also emits the quantized serving cache.
 
     ``cache_budget``: total cache capacity (>= prompt length; extra room for
-    decode steps). Returns (logits, cache_pytree).
+    decode steps). ``batch["lengths"]`` (B,) optionally marks the valid
+    prefix of right-padded rows (batched mixed-length admission): logits are
+    taken at each row's last *real* token and the cache records true
+    lengths/positions. Returns (logits, cache_pytree).
     """
+    lengths = batch.get("lengths")
+    if lengths is not None and (
+            cfg.is_encdec
+            or any(k not in ATTENTION_BLOCKS for k in cfg.block_pattern)):
+        # recurrent scans fold right-padding into their state; only causal
+        # attention isolates real tokens from pads
+        raise ValueError(
+            "batch['lengths'] (right-padded prefill) requires an "
+            f"attention-only decoder; {cfg.name!r} has block pattern "
+            f"{cfg.block_pattern}")
     x = _embed(cfg, params, batch)
     S = x.shape[1]
     consts = {"rope": _rope_for(cfg, batch, S), "enc_out": None,
-              "cache_len": cache_budget or S}
+              "cache_len": cache_budget or S, "lengths": lengths}
     if cfg.is_encdec:
         consts["enc_out"] = _encode(cfg, ctx, params, batch, None)
     x, _, _, caches = _run_stack(cfg, ctx, params["segments"],
                                  segment_plan(cfg), x, consts,
                                  collect=False, prefill=True)
     x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
-    logits = head_logits(cfg, params, ctx, x[:, -1:])
-    return logits, {"segments": caches,
-                    "position": jnp.full((x.shape[0],), S, jnp.int32)}
+    if lengths is None:
+        x_last = x[:, -1:]
+        position = jnp.full((x.shape[0],), S, jnp.int32)
+    else:
+        x_last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
+        position = lengths.astype(jnp.int32)
+    logits = head_logits(cfg, params, ctx, x_last)
+    return logits, {"segments": caches, "position": position}
 
 
 def _block_decode(cfg, ctx, kind, p, x1, cache, positions):

@@ -1,110 +1,333 @@
-"""Batched serving engine over the quantized cache.
+"""Continuous-batching serve engine v2 over the quantized cache.
 
-Slot-based continuous batching (vLLM-lite, sized for the framework's serve
-path): a fixed number of slots share one decode step; finished sequences
-free their slot, queued requests prefill into it. All state (int8 KV /
-recurrent caches) lives in one pytree so the decode step stays a single
-compiled program.
+vLLM-style slot engine, rebuilt so the host only touches the device at
+admission boundaries:
+
+* **Batched prefill** — the scheduler hands over up to ``slots`` queued
+  requests at once; they are right-padded to a length bucket and prefilled
+  in one compiled call (per-row ``lengths`` keep the cache and logits exact;
+  see ``models.prefill``). Architectures with recurrent blocks, where
+  padding would corrupt the scan state, admit exact-length groups instead.
+* **On-device decode loop** — sampling (greedy / temperature / top-k),
+  per-slot EOS + max-token tracking, and the generated-token buffers all
+  live in the device state pytree; ``lax.while_loop`` runs up to
+  ``decode_block`` steps per compiled call and stops early once every slot
+  is inactive. No ``int(...)`` / ``np.asarray`` per token — the host syncs
+  once per chunk to harvest finished slots and admit new work.
+* **Scheduler** (``serve.scheduler``) — pluggable FCFS / shortest-prompt
+  policies plus per-request TTFT/latency accounting.
+
+All per-slot cache state (int8 KV / recurrent) stays in one pytree so the
+decode chunk is a single compiled program regardless of slot occupancy;
+inactive slots ride along masked (their commits are dropped) and are
+recycled by the next admission.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTENTION_BLOCKS, BLOCK_ATTN, ModelConfig
 from repro.core.qat import make_ctx
 from repro.models import decode_step, init_cache, prefill
+from repro.serve.sampling import TOP_K_CAP, fold_step, sample_tokens
+from repro.serve.scheduler import Scheduler
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)                    # identity equality: the ndarray
+class Request:                          # prompt field breaks value __eq__
     uid: int
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int = 32
     eos_id: int = -1                    # -1: never stops early
+    temperature: float = 0.0            # <= 0: greedy
+    top_k: int = 0                      # 0: no top-k filtering
+    seed: int = 0
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    _arrival: int = 0                   # set by the scheduler
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, policy: str = "A8d-C8-W4",
-                 slots: int = 8, cache_len: int = 512):
+                 slots: int = 8, cache_len: int = 512,
+                 max_new_cap: int = 256, decode_block: int = 8,
+                 sched_policy: str = "fcfs", prefill_bucket: int = 16):
         self.cfg = cfg
         self.params = params
         self.ctx = make_ctx(policy)
         self.slots = slots
         self.cache_len = cache_len
-        self.cache = init_cache(cfg, self.ctx, slots, cache_len)
-        self.active: Dict[int, Request] = {}        # slot -> request
-        self.queue: List[Request] = []
-        self.last_tokens = jnp.zeros((slots, 1), jnp.int32)
-        self._decode = jax.jit(
-            lambda p, t, c: decode_step(cfg, p, self.ctx, t, c))
-        self._stats = {"tokens_out": 0, "decode_steps": 0, "decode_s": 0.0}
+        self.max_new_cap = max_new_cap
+        self.decode_block = decode_block
+        self.prefill_bucket = prefill_bucket
+        self.scheduler = Scheduler(sched_policy)
+        # right-padded batched prefill is exact only when every block is
+        # attention (causality isolates real tokens from padding); recurrent
+        # scans absorb pad steps into their state, so those admit
+        # exact-length groups instead.
+        self._pad_ok = (all(k in ATTENTION_BLOCKS for k in cfg.block_pattern)
+                        and not cfg.is_encdec)
+        # full (non-sliding) attention caches are a hard capacity bound;
+        # ring-buffered / recurrent state is not
+        self._cache_bound = (BLOCK_ATTN in cfg.block_pattern
+                             and not cfg.sliding_window)
+        # greedy_only is a trace-time constant: two compiled variants at
+        # most. The state pytree is donated so the slot caches are updated
+        # in place (no 2x cache copy per chunk; a no-op on backends
+        # without donation support, e.g. CPU).
+        self._decode_jit = jax.jit(self._decode_chunk, static_argnums=(2,),
+                                   donate_argnums=(1,))
+        self._admit_jit = jax.jit(self._admit_batch, static_argnums=(10,),
+                                  donate_argnums=(1,))
+        self.reset()
 
-    # ---- request lifecycle ----
+    # ------------------------------------------------------------------
+    # Compiled programs
+    # ------------------------------------------------------------------
+
+    def _decode_chunk(self, params, state, greedy_only):
+        """Up to ``decode_block`` decode steps, entirely on device."""
+        slots, cap = self.slots, self.max_new_cap
+
+        def cond(st):
+            return (st["i"] < self.decode_block) & jnp.any(st["active"])
+
+        def body(st):
+            logits, cache = decode_step(self.cfg, params, self.ctx,
+                                        st["tokens"], st["cache"])
+            keys_t = fold_step(st["keys"], st["n_gen"])
+            toks = sample_tokens(logits[:, -1], keys_t, st["temp"],
+                                 st["top_k"], greedy_only=greedy_only)
+            act = st["active"]
+            # commit only active slots; inactive rows scatter out of range
+            row = jnp.where(act, st["n_gen"], cap)
+            out = st["out"].at[jnp.arange(slots), row].set(toks, mode="drop")
+            n_gen = st["n_gen"] + act.astype(jnp.int32)
+            still = act & (toks != st["eos"]) & (n_gen < st["max_new"])
+            return {**st, "cache": cache,
+                    "tokens": jnp.where(act[:, None], toks[:, None],
+                                        st["tokens"]),
+                    "out": out, "n_gen": n_gen, "active": still,
+                    "steps": st["steps"] + 1,
+                    "committed": st["committed"] + jnp.sum(
+                        act.astype(jnp.int32)),
+                    "i": st["i"] + 1}
+
+        st = {**state, "i": jnp.int32(0)}
+        st = jax.lax.while_loop(cond, body, st)
+        st.pop("i")
+        return st
+
+    def _admit_batch(self, params, state, tokens, lengths, slot_idx, eos,
+                     max_new, temp, top_k, keys, greedy_only):
+        """One batched prefill + scatter of n fresh rows into their slots.
+
+        Rows may be padding (the host pads the admission batch up to a
+        power of two to bound compile variants); their ``slot_idx`` is
+        out of range and every scatter drops them.
+        """
+        batch = {"tokens": tokens}
+        if self._pad_ok:
+            batch["lengths"] = lengths
+        logits, cache_n = prefill(self.cfg, params, self.ctx, batch,
+                                  cache_budget=self.cache_len)
+        n = tokens.shape[0]
+        first = sample_tokens(logits[:, 0],
+                              fold_step(keys, jnp.zeros((n,), jnp.int32)),
+                              temp, top_k, greedy_only=greedy_only)
+        cache = state["cache"]
+        # cache leaves are scan-stacked (repeat, slots, ...); position (slots,)
+        segments = [jax.tree.map(
+            lambda d, s: d.at[:, slot_idx].set(s, mode="drop"), ds, ss)
+            for ds, ss in zip(cache["segments"], cache_n["segments"])]
+        new_cache = {"segments": segments,
+                     "position": cache["position"].at[slot_idx].set(
+                         cache_n["position"], mode="drop")}
+        out = state["out"].at[slot_idx].set(0, mode="drop")
+        return {**state, "cache": new_cache,
+                "tokens": state["tokens"].at[slot_idx, 0].set(first,
+                                                              mode="drop"),
+                "out": out.at[slot_idx, 0].set(first, mode="drop"),
+                "n_gen": state["n_gen"].at[slot_idx].set(1, mode="drop"),
+                "active": state["active"].at[slot_idx].set(
+                    (first != eos) & (max_new > 1), mode="drop"),
+                "eos": state["eos"].at[slot_idx].set(eos, mode="drop"),
+                "max_new": state["max_new"].at[slot_idx].set(max_new,
+                                                             mode="drop"),
+                "temp": state["temp"].at[slot_idx].set(temp, mode="drop"),
+                "top_k": state["top_k"].at[slot_idx].set(top_k, mode="drop"),
+                "keys": state["keys"].at[slot_idx].set(keys, mode="drop")}
+
+    # ------------------------------------------------------------------
+    # Request lifecycle (host side)
+    # ------------------------------------------------------------------
+
+    def reset(self) -> None:
+        """Clear all serving state but keep compiled programs warm."""
+        slots = self.slots
+        self.state = {
+            "cache": init_cache(self.cfg, self.ctx, slots, self.cache_len),
+            "tokens": jnp.zeros((slots, 1), jnp.int32),
+            "out": jnp.zeros((slots, self.max_new_cap), jnp.int32),
+            "n_gen": jnp.zeros((slots,), jnp.int32),
+            "active": jnp.zeros((slots,), bool),
+            "eos": jnp.full((slots,), -1, jnp.int32),
+            "max_new": jnp.ones((slots,), jnp.int32),
+            "temp": jnp.zeros((slots,), jnp.float32),
+            "top_k": jnp.zeros((slots,), jnp.int32),
+            "keys": jnp.zeros((slots, 2), jnp.uint32),
+            "steps": jnp.int32(0),
+            "committed": jnp.int32(0),
+        }
+        self._slot_req = {}
+        self.scheduler = Scheduler(self.scheduler.policy)
+        self._host = {"decode_s": 0.0, "prefill_s": 0.0, "prefill_calls": 0,
+                      "prefill_tokens": 0}
+
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _free_slots(self) -> List[int]:
-        return [s for s in range(self.slots) if s not in self.active]
+        if req.max_new_tokens > self.max_new_cap:
+            raise ValueError(
+                f"max_new_tokens={req.max_new_tokens} exceeds this engine's "
+                f"max_new_cap={self.max_new_cap} (the on-device token "
+                f"buffer); construct ServeEngine with a larger max_new_cap")
+        if req.top_k > TOP_K_CAP:
+            raise ValueError(f"top_k={req.top_k} exceeds TOP_K_CAP="
+                             f"{TOP_K_CAP} (static sampling bound)")
+        # peak cache occupancy is prompt + max_new - 1: the last sampled
+        # token is returned but its KV is never written while resident
+        if self._cache_bound and \
+                len(req.prompt) + req.max_new_tokens - 1 > self.cache_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_new_tokens "
+                f"({req.max_new_tokens}) - 1 exceeds cache_len="
+                f"{self.cache_len} on a full-attention model; raise "
+                f"cache_len or shorten the request")
+        self.scheduler.submit(req)
 
     def _admit(self) -> None:
-        """Prefill queued requests into free slots (per-slot prefill)."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-            logits, cache1 = prefill(self.cfg, self.params, self.ctx, batch,
-                                     cache_budget=self.cache_len)
-            first = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(first)
-            self._write_slot(slot, cache1)
-            self.last_tokens = self.last_tokens.at[slot, 0].set(first)
-            self.active[slot] = req
-
-    def _write_slot(self, slot: int, cache1) -> None:
-        """Copy a freshly prefilled (batch=1) cache into slot ``slot``."""
-        def cp(dst, src):
-            if dst.ndim == src.ndim and dst.shape[0] == self.slots:
-                return dst.at[slot].set(src[0])
-            # scan-stacked leaves: (rep, B, ...) vs (rep, 1, ...)
-            return dst.at[:, slot].set(src[:, 0])
-        # position vector is (slots,) vs (1,)
-        self.cache = jax.tree.map(
-            lambda d, s: d.at[slot].set(s[0]) if d.ndim == 1 else cp(d, s),
-            self.cache, cache1)
-
-    # ---- decode ----
-    def step(self) -> None:
-        self._admit()
-        if not self.active:
+        free = [s for s in range(self.slots) if s not in self._slot_req]
+        if not free or not self.scheduler.pending:
             return
+        reqs = self.scheduler.select(len(free),
+                                     equal_length_only=not self._pad_ok)
+        if not reqs:
+            return
+        n = len(reqs)
+        # pad the admission batch up to a power of two (dummy rows scatter
+        # out of range and drop) so compile variants are O(log slots) per
+        # length bucket instead of one per free-slot count
+        n_pad = 1
+        while n_pad < n:
+            n_pad *= 2
+        n_pad = min(n_pad, self.slots)
+        lens = np.ones((n_pad,), np.int32)
+        lens[:n] = [len(r.prompt) for r in reqs]
+        if self._pad_ok:
+            L = -(-int(lens.max()) // self.prefill_bucket) \
+                * self.prefill_bucket
+        else:
+            L = int(lens[0])
+        toks = np.zeros((n_pad, L), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :lens[i]] = r.prompt[:L]
+        slot_idx = np.full((n_pad,), self.slots, np.int32)   # dummy: dropped
+        slot_idx[:n] = free[:n]
+        keys = np.zeros((n_pad, 2), np.uint32)
+        keys[:n] = np.stack([jax.random.fold_in(jax.random.PRNGKey(r.seed),
+                                                r.uid) for r in reqs])
+
+        def col(fn, fill, dtype):
+            v = np.full((n_pad,), fill, dtype)
+            v[:n] = [fn(r) for r in reqs]
+            return jnp.asarray(v)
+
+        greedy_only = all(r.temperature <= 0.0 for r in reqs)
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(self.params, self.last_tokens,
-                                          self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        self._stats["decode_s"] += time.perf_counter() - t0
-        self._stats["decode_steps"] += 1
-        for slot, req in list(self.active.items()):
-            tok = int(nxt[slot])
-            req.generated.append(tok)
-            self._stats["tokens_out"] += 1
-            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                del self.active[slot]
-            else:
-                self.last_tokens = self.last_tokens.at[slot, 0].set(tok)
+        self.state = self._admit_jit(
+            self.params, self.state, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(slot_idx),
+            col(lambda r: r.eos_id, -1, np.int32),
+            col(lambda r: r.max_new_tokens, 1, np.int32),
+            col(lambda r: r.temperature, 0.0, np.float32),
+            col(lambda r: r.top_k, 0, np.int32), jnp.asarray(keys),
+            greedy_only)
+        jax.block_until_ready(self.state["tokens"])
+        self._host["prefill_s"] += time.perf_counter() - t0
+        self._host["prefill_calls"] += 1
+        self._host["prefill_tokens"] += n     # first token of each request
+        self.scheduler.on_admitted(reqs)
+        for s, r in zip(slot_idx.tolist(), reqs):
+            self._slot_req[s] = r
+
+    def _harvest(self) -> None:
+        """Admission-boundary sync: pull finished slots' token buffers."""
+        if not self._slot_req:
+            return
+        act, n_gen = jax.device_get((self.state["active"],
+                                     self.state["n_gen"]))
+        finished = [s for s in self._slot_req if not act[s]]
+        if not finished:
+            return
+        rows = jax.device_get(self.state["out"][np.asarray(finished)])
+        for i, s in enumerate(finished):
+            req = self._slot_req.pop(s)
+            req.generated = rows[i, :n_gen[s]].tolist()
+            req.done = True
+            self.scheduler.on_finished(req)
+
+    # ------------------------------------------------------------------
+    # Drive
+    # ------------------------------------------------------------------
+
+    def step(self) -> None:
+        """One admission + one on-device decode chunk + harvest."""
+        self._admit()
+        if self._slot_req:
+            greedy_only = all(r.temperature <= 0.0
+                              for r in self._slot_req.values())
+            t0 = time.perf_counter()
+            self.state = self._decode_jit(self.params, self.state,
+                                          greedy_only)
+            self._harvest()               # device_get doubles as the sync
+            self._host["decode_s"] += time.perf_counter() - t0
+
+    def _flush_partial(self) -> None:
+        """Surface still-resident slots' tokens (budget-aborted drain):
+        their buffers are on device and already counted in the stats."""
+        if not self._slot_req:
+            return
+        resident = sorted(self._slot_req)
+        n_gen = jax.device_get(self.state["n_gen"])
+        rows = jax.device_get(self.state["out"][np.asarray(resident)])
+        for i, s in enumerate(resident):
+            self._slot_req[s].generated = rows[i, :n_gen[s]].tolist()
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict:
-        steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        """Serve until queue + slots are empty; ``max_steps`` bounds the
+        total decode-step budget (chunk-granular). If the budget aborts the
+        drain, in-flight requests keep their partial ``generated`` output
+        (``done`` stays False)."""
+        chunks = 0
+        while ((self.scheduler.pending or self._slot_req)
+               and chunks * self.decode_block < max_steps):
             self.step()
-            steps += 1
-        return dict(self._stats)
+            chunks += 1
+        self._flush_partial()
+        return self.stats()
+
+    def stats(self) -> Dict:
+        steps, committed = jax.device_get((self.state["steps"],
+                                           self.state["committed"]))
+        d = dict(self._host)
+        prefill_tokens = d.pop("prefill_tokens")
+        d["decode_steps"] = int(steps)
+        d["tokens_out"] = int(committed) + prefill_tokens
+        d["decode_step_s"] = (d["decode_s"] / max(int(steps), 1))
+        d.update(self.scheduler.stats())
+        return d

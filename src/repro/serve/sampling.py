@@ -1,0 +1,58 @@
+"""On-device token sampling for the serve engine.
+
+Everything here is shape-stable and batched over slots so the whole decode
+loop (sampling included) stays inside one compiled program: per-slot
+temperature / top-k / PRNG keys are device arrays, greedy vs. stochastic is
+a ``jnp.where`` select, and the PRNG stream is derived deterministically by
+folding the per-request key with the slot's generated-token count (no host
+RNG state to sync). Per-request knobs ride on ``engine.Request``
+(temperature <= 0 means greedy; top_k == 0 disables filtering).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def make_slot_keys(seeds: jnp.ndarray) -> jnp.ndarray:
+    """(n,) int seeds -> (n, 2) uint32 raw PRNG keys (one stream per slot)."""
+    return jax.vmap(jax.random.PRNGKey)(seeds.astype(jnp.uint32))
+
+
+def fold_step(keys: jnp.ndarray, counters: jnp.ndarray) -> jnp.ndarray:
+    """Derive this step's per-slot keys from persistent keys + counters."""
+    return jax.vmap(jax.random.fold_in)(keys, counters)
+
+
+TOP_K_CAP = 64      # static bound on per-request top_k (O(V*K) threshold
+                    # search instead of a full-vocab sort per decode step)
+
+
+def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray,
+                  temperature: jnp.ndarray, top_k: jnp.ndarray,
+                  greedy_only: bool = False) -> jnp.ndarray:
+    """Batched greedy / temperature / top-k sampling.
+
+    logits (B, V) float; keys (B, 2) uint32; temperature (B,) f32 (<=0 means
+    greedy); top_k (B,) int32 (0 disables; values above ``TOP_K_CAP`` are
+    rejected at submit). Returns (B,) int32 tokens. ``greedy_only``
+    (trace-time constant) compiles the argmax-only variant — no top-k
+    search / categorical draw in the decode loop when no resident request
+    samples.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if greedy_only:
+        return greedy
+    # per-row top-k threshold: value of the k-th largest logit
+    kc = min(TOP_K_CAP, V)
+    desc = jax.lax.top_k(logits, kc)[0]                       # (B, kc)
+    kth = jnp.take_along_axis(
+        desc, jnp.clip(top_k - 1, 0, kc - 1)[:, None], axis=-1)
+    masked = jnp.where((top_k[:, None] > 0) & (logits < kth), _NEG, logits)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    drawn = jax.vmap(jax.random.categorical)(keys, masked / temp)
+    return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)

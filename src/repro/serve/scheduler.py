@@ -1,0 +1,121 @@
+"""Request scheduling + latency accounting for the serve engine.
+
+The scheduler owns the waiting queue and all per-request timing; the engine
+asks it for the next admission batch whenever slots free up. Policies are
+pluggable:
+
+* ``fcfs`` — first-come-first-served (arrival order)
+* ``sjf``  — shortest-prompt-first (minimizes mean TTFT under load; ties
+  broken by arrival so it stays starvation-bounded for equal lengths)
+
+Batched prefill wants co-admitted prompts of similar length; ``select``
+therefore groups the policy-ordered head of the queue into one prefill
+bucket: padded engines take any lengths (bucketed up to a common padded
+length), exact-length engines (recurrent archs, where right-padding would
+corrupt the scan state) only take requests sharing the leader's length.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+POLICIES = ("fcfs", "sjf")
+
+
+@dataclass
+class RequestTiming:
+    submit_t: float
+    admit_t: Optional[float] = None     # prefill done, first token exists
+    finish_t: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.admit_t is None else self.admit_t - self.submit_t
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.finish_t is None else self.finish_t - self.submit_t
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile — the one definition every serve stat uses
+    (benchmarks import this so seed/v2 numbers stay comparable)."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[i]
+
+
+class Scheduler:
+    """Queue + admission policy + per-request latency bookkeeping."""
+
+    def __init__(self, policy: str = "fcfs"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+        self.policy = policy
+        self._queue: List = []                   # waiting Requests
+        # timing rides on the request object (uids may collide); the
+        # scheduler keeps the full list for aggregate stats
+        self._timings: List[RequestTiming] = []
+        self._seq = 0                            # arrival tiebreaker
+
+    # ---- queue ----
+    def submit(self, req, now: Optional[float] = None) -> None:
+        req._arrival = self._seq
+        self._seq += 1
+        req._timing = RequestTiming(
+            submit_t=time.perf_counter() if now is None else now)
+        self._timings.append(req._timing)
+        self._queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def _ordered(self) -> List:
+        if self.policy == "sjf":
+            return sorted(self._queue,
+                          key=lambda r: (len(r.prompt), r._arrival))
+        return list(self._queue)
+
+    def select(self, max_n: int, *, equal_length_only: bool = False) -> List:
+        """Pop up to ``max_n`` requests for one batched prefill.
+
+        ``equal_length_only``: restrict the batch to the leader's exact
+        prompt length (recurrent caches can't absorb right-padding).
+        """
+        if max_n <= 0 or not self._queue:
+            return []
+        ordered = self._ordered()
+        batch = [ordered[0]]
+        for r in ordered[1:]:
+            if len(batch) >= max_n:
+                break
+            if equal_length_only and len(r.prompt) != len(batch[0].prompt):
+                continue
+            batch.append(r)
+        for r in batch:
+            self._queue.remove(r)
+        return batch
+
+    # ---- accounting ----
+    def on_admitted(self, reqs, now: Optional[float] = None) -> None:
+        t = time.perf_counter() if now is None else now
+        for r in reqs:
+            r._timing.admit_t = t
+
+    def on_finished(self, req, now: Optional[float] = None) -> None:
+        req._timing.finish_t = time.perf_counter() if now is None else now
+
+    def stats(self) -> Dict[str, float]:
+        ttfts = [t.ttft for t in self._timings if t.ttft is not None]
+        lats = [t.latency for t in self._timings if t.latency is not None]
+        return {
+            "requests_finished": len(lats),
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p95_s": percentile(ttfts, 95),
+            "latency_p50_s": percentile(lats, 50),
+            "latency_p95_s": percentile(lats, 95),
+        }

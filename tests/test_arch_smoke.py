@@ -41,6 +41,7 @@ class TestArchSmoke:
         assert logits.shape == (B, S_out, cfg.vocab_size)
         assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
+    @pytest.mark.slow          # full QAT train step across all 10 archs
     def test_train_step(self, arch, rng):
         cfg = get_reduced_config(arch)
         tcfg = TrainConfig(total_steps=10, ref_steps=10, batch_size=2,

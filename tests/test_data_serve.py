@@ -90,4 +90,4 @@ class TestServeEngine:
                                max_new_tokens=2))
         stats = eng.run_until_drained()
         # each request: 1 token from prefill + 1 decoded token
-        assert stats["tokens_out"] == 3
+        assert stats["tokens_out"] == 6

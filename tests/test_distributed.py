@@ -13,6 +13,9 @@ import pytest
 
 from repro.runtime.hlo_analysis import _shape_bytes, analyze_collectives
 
+# multi-device subprocess compiles put the whole module in the slow tier
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
