@@ -125,6 +125,81 @@ def make_requests(args, cfg) -> List[Request]:
             for uid in range(args.requests)]
 
 
+# --------------------------------------------------------------------------
+# Paged vs dense KV cache at equal HBM budget
+# --------------------------------------------------------------------------
+
+def make_mixed_requests(n: int, cfg, lens,
+                        max_new: int = 8) -> List[Request]:
+    """Mixed-length workload: mostly short prompts plus a long tail that
+    forces the dense engine's per-slot stripe to the worst case."""
+    rng = np.random.default_rng(1)
+    return [Request(uid=uid,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        lens[uid % len(lens)]).astype(
+                                            np.int32),
+                    max_new_tokens=max_new)
+            for uid in range(n)]
+
+
+MIXED_LENS = (4, 8, 12, 56)
+MIXED_MAX_NEW = 8
+
+
+def paged_vs_dense(args, cfg, params) -> Dict:
+    """Same mixed-length workload, same total cache HBM: a dense engine
+    reserving ``cache_len`` per slot vs a paged engine whose pool holds the
+    identical token budget in ``block_size``-token blocks shared across 4x
+    the slots. Records tok/s, peak cache bytes, and the max-concurrent-
+    residents ratio (the fragmentation win)."""
+    slots_d, cache_len, bs = args.slots, args.cache_len, 16
+    budget_tokens = slots_d * cache_len           # dense total reservation
+    n_req = args.requests
+
+    def dense_engine():
+        return ServeEngine(cfg, params, policy=args.policy, slots=slots_d,
+                           cache_len=cache_len,
+                           decode_block=args.decode_block,
+                           max_new_cap=max(32, args.max_new))
+
+    def paged_engine():
+        return ServeEngine(cfg, params, policy=args.policy,
+                           slots=slots_d * 4, cache_len=cache_len,
+                           kv_layout="paged", block_size=bs,
+                           num_blocks=budget_tokens // bs,
+                           max_seq_len=cache_len,
+                           decode_block=args.decode_block,
+                           max_new_cap=max(32, args.max_new))
+
+    out: Dict = {"workload": {"requests": n_req,
+                              "prompt_lens": list(MIXED_LENS),
+                              "max_new": MIXED_MAX_NEW,
+                              "budget_tokens": budget_tokens,
+                              "block_size": bs}}
+    for name, factory in (("dense", dense_engine), ("paged", paged_engine)):
+        engine = factory()
+        run_engine(engine, make_mixed_requests(n_req, cfg, MIXED_LENS,
+                                               MIXED_MAX_NEW))
+        engine.reset()                                        # ^ warmup
+        stats = run_engine(engine, make_mixed_requests(n_req, cfg,
+                                                       MIXED_LENS,
+                                                       MIXED_MAX_NEW))
+        out[name] = {k: stats[k] for k in
+                     ("tok_s", "wall_s", "tokens_out", "max_residents",
+                      "cache_tokens_capacity", "peak_cache_tokens",
+                      "cache_bytes", "peak_cache_bytes", "ttft_p50_s",
+                      "ttft_p95_s")}
+        print(f"{name:5s} kv: {stats['tok_s']:8.1f} tok/s, "
+              f"{stats['max_residents']:3d} max residents, peak cache "
+              f"{stats['peak_cache_tokens']} tokens "
+              f"({stats['peak_cache_bytes'] / 1024:.0f} KiB)")
+    out["resident_ratio"] = (out["paged"]["max_residents"]
+                             / max(out["dense"]["max_residents"], 1))
+    print(f"paged admits {out['resident_ratio']:.2f}x the concurrent "
+          f"residents at the same cache HBM")
+    return out
+
+
 def run_engine(engine, reqs) -> Dict:
     for r in reqs:
         engine.submit(r)
@@ -156,6 +231,8 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced CI workload (fewer/shorter requests)")
     ap.add_argument("--skip-baseline", action="store_true")
+    ap.add_argument("--skip-paged", action="store_true",
+                    help="skip the paged-vs-dense cache comparison")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
@@ -186,6 +263,18 @@ def main():
         result["speedup_tok_s"] = v2["tok_s"] / max(result["seed"]["tok_s"],
                                                     1e-9)
         print(f"speedup: {result['speedup_tok_s']:.2f}x")
+    if not args.skip_paged:
+        if any(k != "attn" for k in cfg.block_pattern) or cfg.is_encdec \
+                or cfg.sliding_window:
+            print(f"skipping paged comparison: {cfg.name} is not a "
+                  f"full-attention decoder")
+        else:
+            # smoke already shrank the workload via args; the comparison
+            # reuses slots/cache_len so the HBM budget follows it
+            pv_req = args.requests if args.smoke else 24
+            args_pv = argparse.Namespace(**{**vars(args),
+                                            "requests": max(pv_req, 12)})
+            result["paged_vs_dense"] = paged_vs_dense(args_pv, cfg, params)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -65,6 +65,94 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, sk_ref, sv_ref, o_ref,
                     jnp.maximum(l_ref[0, 0], 1e-20)).astype(o_ref.dtype)
 
 
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, sk_ref, sv_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, bs: int, nt: int,
+                  scale: float):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32) * sk_ref[0, 0][..., None]  # (bs, D)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # (1, bs)
+
+    # table entry t of this slot covers absolute positions [t*bs, (t+1)*bs);
+    # sentinel entries gather a clamped block whose tokens all land here
+    pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[b]
+    scores = jnp.where(valid, scores, _NEG)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    v = v_ref[0, 0].astype(jnp.float32) * sv_ref[0, 0][..., None]  # (bs, D)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (1, D)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[0, 0] = m_new
+
+    @pl.when(t == nt - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[0, 0], 1e-20)).astype(o_ref.dtype)
+
+
+def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
+                          interpret: bool = True):
+    """Block-table flash-decode over a paged int8/int4 KV pool.
+
+    Same online-softmax walk as the dense kernel, but the grid's innermost
+    dim walks the slot's *block table* instead of a contiguous cache stripe:
+    the table rides in as a scalar-prefetch operand so the K/V BlockSpec
+    index maps can turn (slot, table index) into a pool block id before the
+    tile DMA is issued. Sentinel entries must be clamped to NB-1 by the
+    caller (ops.py); their scores are masked by ``lengths``.
+
+    q (B,H,D); pools (NB,Hkv,bs,D) int8; scales (NB,Hkv,bs) fp32;
+    block_tbl (B,T) int32 (clamped); lengths (B,) int32.
+    """
+    B, H, D = q.shape
+    Hkv, bs = k_pool.shape[1], k_pool.shape[2]
+    T = block_tbl.shape[1]
+    group = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    kv_ix = lambda b, h, t, tbl, lens: (tbl[b, t], h // group, 0, 0)
+    sc_ix = lambda b, h, t, tbl, lens: (tbl[b, t], h // group, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # block_tbl, lengths
+        grid=(B, H, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, t, tbl, lens: (b, h, 0)),
+            pl.BlockSpec((1, 1, bs, D), kv_ix),      # k pool
+            pl.BlockSpec((1, 1, bs, D), kv_ix),      # v pool
+            pl.BlockSpec((1, 1, bs), sc_ix),         # s_k pool
+            pl.BlockSpec((1, 1, bs), sc_ix),         # s_v pool
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, t, tbl, lens:
+                               (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),   # running max
+            pltpu.VMEM((1, 1), jnp.float32),   # running denom
+            pltpu.VMEM((1, D), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, bs=bs, nt=T, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tbl, lengths, q, k_pool, v_pool, s_k, s_v)
+
+
 def kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths,
                     interpret: bool = True):
     """See ref.py for shapes; S must be a multiple of BS (ops.py pads)."""

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.kvq_attn import kernel as K
-from repro.kernels.kvq_attn.ref import kvq_decode_attn_ref
+from repro.kernels.kvq_attn.ref import (kvq_decode_attn_ref,
+                                        kvq_paged_decode_attn_ref)
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -31,3 +32,23 @@ def kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths,
     return K.kvq_decode_attn(q, k_q, v_q, s_k.astype(jnp.float32),
                              s_v.astype(jnp.float32),
                              lengths.astype(jnp.int32), interpret=_INTERPRET)
+
+
+def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
+                          use_pallas: bool = True) -> jnp.ndarray:
+    """Block-table decode attention over a paged integer cache pool.
+
+    q (B,H,D); k_pool/v_pool (NB,Hkv,bs,D) int8; s_k/s_v (NB,Hkv,bs) fp32;
+    block_tbl (B,T) int32 (entries >= NB are unallocated sentinels, clamped
+    here); lengths (B,) int32 tokens resident per slot.
+    """
+    if not use_pallas:
+        return kvq_paged_decode_attn_ref(q, k_pool, v_pool, s_k, s_v,
+                                         block_tbl, lengths)
+    nb = k_pool.shape[0]
+    tbl = jnp.minimum(block_tbl.astype(jnp.int32), nb - 1)
+    return K.kvq_paged_decode_attn(q, k_pool, v_pool,
+                                   s_k.astype(jnp.float32),
+                                   s_v.astype(jnp.float32), tbl,
+                                   lengths.astype(jnp.int32),
+                                   interpret=_INTERPRET)

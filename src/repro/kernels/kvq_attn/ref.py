@@ -30,3 +30,38 @@ def kvq_decode_attn_ref(q, k_q, v_q, s_k, s_v, lengths):
     p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
     out = jnp.einsum("bngs,bnsd->bngd", p, v)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Paged (block-table) variant
+# --------------------------------------------------------------------------
+
+def gather_paged_kv(pool: jnp.ndarray, block_tbl: jnp.ndarray) -> jnp.ndarray:
+    """Gather a slot-contiguous view out of a global block pool.
+
+    pool: (NB, Hkv, bs, ...) — K/V values (trailing D) or scales (no D).
+    block_tbl: (B, T) int32 — entries >= NB are sentinels; they are clamped
+    here and masked by ``lengths`` downstream (table entry i covers absolute
+    token positions [i*bs, (i+1)*bs)).
+    Returns (B, Hkv, T*bs, ...).
+    """
+    nb = pool.shape[0]
+    g = pool[jnp.minimum(block_tbl, nb - 1)]         # (B, T, Hkv, bs, ...)
+    g = jnp.moveaxis(g, 2, 1)                        # (B, Hkv, T, bs, ...)
+    return g.reshape(g.shape[:2] + (g.shape[2] * g.shape[3],) + g.shape[4:])
+
+
+def kvq_paged_decode_attn_ref(q, k_pool, v_pool, s_k, s_v, block_tbl,
+                              lengths):
+    """Block-table decode attention oracle: gather, then dense ref.
+
+    q (B,H,D); k_pool/v_pool (NB,Hkv,bs,D) int8; s_k/s_v (NB,Hkv,bs) fp32;
+    block_tbl (B,T) int32; lengths (B,) int32 tokens resident per slot.
+    """
+    return kvq_decode_attn_ref(
+        q,
+        gather_paged_kv(k_pool, block_tbl),
+        gather_paged_kv(v_pool, block_tbl),
+        gather_paged_kv(s_k, block_tbl),
+        gather_paged_kv(s_v, block_tbl),
+        lengths)

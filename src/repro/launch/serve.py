@@ -47,8 +47,21 @@ def main():
                     help="draw prompt lengths in [prompt_len/2, prompt_len]")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--decode-block", type=int, default=8,
-                    help="decode steps per compiled on-device chunk")
+    ap.add_argument("--decode-block", default="8",
+                    help="decode steps per compiled on-device chunk; "
+                         "'auto' probes decode-step latency at startup")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="paged = block-table KV cache with free-block "
+                         "admission and chunked prefill")
+    ap.add_argument("--block-size", type=int, default=64,
+                    help="tokens per cache block (paged layout)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool size in blocks (0 = match the dense "
+                         "slots*cache_len budget)")
+    ap.add_argument("--max-seq-len", type=int, default=0,
+                    help="per-request token cap / block-table width "
+                         "(paged; 0 = match the dense cache_len)")
     ap.add_argument("--sched", default="fcfs", choices=("fcfs", "sjf"))
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -58,11 +71,18 @@ def main():
 
     cfg = (get_config if args.full else get_reduced_config)(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
+    decode_block = (args.decode_block if args.decode_block == "auto"
+                    else int(args.decode_block))
+    kw = {}
+    if args.kv_layout == "paged":
+        kw = {"kv_layout": "paged", "block_size": args.block_size,
+              "num_blocks": args.num_blocks or None,
+              "max_seq_len": args.max_seq_len or None}
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
                          cache_len=args.cache_len,
-                         decode_block=args.decode_block,
+                         decode_block=decode_block,
                          sched_policy=args.sched,
-                         max_new_cap=max(32, args.max_new))
+                         max_new_cap=max(32, args.max_new), **kw)
     for req in build_requests(args, cfg):
         engine.submit(req)
     t0 = time.perf_counter()

@@ -41,6 +41,27 @@ def _decode_attn(q, k_q, v_q, s_k, s_v, lengths) -> jnp.ndarray:
     return decode_attention_intcache(q, k_q, v_q, s_k, s_v, lengths)
 
 
+def _decode_attn_paged(q, k_pool, v_pool, s_k, s_v, block_tbl,
+                       lengths) -> jnp.ndarray:
+    """Decode attention through a block table over the global cache pool.
+
+    On TPU the Pallas paged kernel walks the slot's blocks directly (the
+    table is a scalar-prefetch operand of the grid); elsewhere we gather the
+    slot's blocks into a contiguous view and reuse the same fused XLA path
+    as the dense cache, so dense and paged decode agree bitwise on CPU.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels.kvq_attn.ops import kvq_paged_decode_attn
+        return kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v,
+                                     block_tbl, lengths)
+    from repro.kernels.kvq_attn.ref import gather_paged_kv
+    return decode_attention_intcache(
+        q, gather_paged_kv(k_pool, block_tbl),
+        gather_paged_kv(v_pool, block_tbl),
+        gather_paged_kv(s_k, block_tbl),
+        gather_paged_kv(s_v, block_tbl), lengths)
+
+
 # ==========================================================================
 # Dense MLPs
 # ==========================================================================
@@ -267,7 +288,8 @@ def quantize_kv_for_cache(ctx: QuantCtx, p: Dict, k: jnp.ndarray,
 def attn_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
                  rope, col=None, *, window: int = 0, cache_len: int = 0,
                  enc_out: Optional[jnp.ndarray] = None,
-                 lengths: Optional[jnp.ndarray] = None):
+                 lengths: Optional[jnp.ndarray] = None,
+                 page_size: int = 0):
     """Like attn_fwd but also emits the quantized cache for serving.
 
     ``lengths`` (B,) marks the valid (right-padded) prefix of each row:
@@ -275,6 +297,12 @@ def attn_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
     tracks the true per-row length, so a single padded prefill call can
     admit prompts of different lengths (causality keeps real-token outputs
     independent of the padding).
+
+    ``page_size`` > 0 switches the emitted cache to *block shape*
+    (B, nb, Hkv, page_size, D): the engine scatters those blocks into the
+    global pool through the slot's block table instead of copying a dense
+    stripe. Attention math is identical either way; only the commit layout
+    changes. Requires window == 0 (paged layers are full attention).
     """
     B, S, _ = x.shape
     xkv = enc_out if enc_out is not None else x
@@ -287,6 +315,15 @@ def attn_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
     y = qlinear(ctx, out, p["wo"], subcol(col, "wo"))
     k_q, v_q, s_k, s_v = quantize_kv_for_cache(ctx, p, k, v)
     S_in = k.shape[1]
+    if page_size:
+        if window:
+            raise ValueError("paged cache layout requires full attention "
+                             "(window == 0)")
+        if lengths is None:
+            lengths = jnp.full((B,), S_in, jnp.int32)
+        cache = _paginate_kv(k_q, v_q, s_k, s_v, page_size)
+        cache["length"] = lengths.astype(jnp.int32)
+        return y, cache
     Sc = cache_len or S_in
     if window:
         Sc = min(Sc, window)   # ring eviction enforces the sliding window
@@ -314,6 +351,25 @@ def attn_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x: jnp.ndarray,
     return y, cache
 
 
+def _paginate_kv(k_q, v_q, s_k, s_v, page_size: int) -> Dict:
+    """Cache-layout K/V (B, Hkv, S, D) + scales (B, Hkv, S) -> block shape
+    (B, nb, Hkv, page_size, D) / (B, nb, Hkv, page_size); the trailing
+    partial block is zero-padded (masked by ``length`` at read, overwritten
+    in place by decode)."""
+    B, Hkv, S = k_q.shape[0], k_q.shape[1], k_q.shape[2]
+    nb = -(-S // page_size)
+    pad = nb * page_size - S
+
+    def blk(x):
+        widths = ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 3)
+        xp = jnp.pad(x, widths)
+        xp = xp.reshape((B, Hkv, nb, page_size) + x.shape[3:])
+        return jnp.moveaxis(xp, 2, 1)                # (B, nb, Hkv, bs, ...)
+
+    return {"k_q": blk(k_q), "v_q": blk(v_q),
+            "s_k": blk(s_k), "s_v": blk(s_v)}
+
+
 def _blank_attn_cache(B: int, cfg: ModelConfig, S: int, qdtype=jnp.int8):
     hd = cfg.resolved_head_dim
     return {
@@ -332,13 +388,35 @@ def init_attn_cache(cfg: ModelConfig, B: int, S: int, *, window: int = 0,
     return _blank_attn_cache(B, cfg, Sc, dtype)
 
 
+def init_paged_attn_cache(cfg: ModelConfig, B: int, num_blocks: int,
+                          page_size: int, dtype=jnp.int8):
+    """Global block pool for one attention layer: ``num_blocks`` blocks of
+    ``page_size`` tokens, shared by every slot through the block table."""
+    hd = cfg.resolved_head_dim
+    return {
+        "k_q": jnp.zeros((num_blocks, cfg.n_kv_heads, page_size, hd), dtype),
+        "v_q": jnp.zeros((num_blocks, cfg.n_kv_heads, page_size, hd), dtype),
+        "s_k": jnp.zeros((num_blocks, cfg.n_kv_heads, page_size),
+                         jnp.float32),
+        "s_v": jnp.zeros((num_blocks, cfg.n_kv_heads, page_size),
+                         jnp.float32),
+        "length": jnp.zeros((B,), jnp.int32),
+    }
+
+
 def attn_decode(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x1: jnp.ndarray,
                 cache: Dict, positions: jnp.ndarray, *, window: int = 0,
-                cross: bool = False):
+                cross: bool = False,
+                block_tbl: Optional[jnp.ndarray] = None):
     """One-token decode step. x1: (B, 1, d). Returns (y1, new_cache).
 
     Self-attention writes the new K/V into the (ring-buffered when SWA)
-    int cache; cross-attention reads a frozen cache.
+    int cache; cross-attention reads a frozen cache. ``block_tbl`` (B, T)
+    switches the layer to the paged layout: the commit is routed through
+    the slot's block table into the global pool (slots whose table entry is
+    the out-of-range sentinel scatter nothing — that is how the engine
+    parks finished slots), and attention walks the table instead of a
+    contiguous stripe.
     """
     from repro.models.common import rope_tables  # local to avoid cycle
     B = x1.shape[0]
@@ -356,6 +434,33 @@ def attn_decode(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x1: jnp.ndarray,
         rope = rope_tables(positions[:, None], hd, cfg.rope_theta)
     q, k, v = _qkv(cfg, ctx, p, x1, x1, rope, None)
     k_q1, v_q1, s_k1, s_v1 = quantize_kv_for_cache(ctx, p, k, v)
+    if block_tbl is not None:
+        if window:
+            raise ValueError("paged cache layout requires full attention "
+                             "(window == 0)")
+        bs = cache["k_q"].shape[2]
+        T = block_tbl.shape[1]
+        pos = cache["length"]                        # tokens written so far
+        blk = jnp.take_along_axis(
+            block_tbl, jnp.minimum(pos // bs, T - 1)[:, None], axis=1)[:, 0]
+        off = pos % bs
+        new = dict(cache)
+        # blk (B,) / off (B,) advanced indices around the head slice ->
+        # (B, Hkv, ...) result rows; sentinel blk drops the whole commit
+        new["k_q"] = cache["k_q"].at[blk, :, off].set(k_q1[:, :, 0],
+                                                      mode="drop")
+        new["v_q"] = cache["v_q"].at[blk, :, off].set(v_q1[:, :, 0],
+                                                      mode="drop")
+        new["s_k"] = cache["s_k"].at[blk, :, off].set(s_k1[:, :, 0],
+                                                      mode="drop")
+        new["s_v"] = cache["s_v"].at[blk, :, off].set(s_v1[:, :, 0],
+                                                      mode="drop")
+        new["length"] = pos + 1
+        out = _decode_attn_paged(q[:, 0], new["k_q"], new["v_q"],
+                                 new["s_k"], new["s_v"], block_tbl,
+                                 new["length"])
+        y = qlinear(ctx, out.reshape(B, cfg.q_dim), p["wo"])
+        return y[:, None], new
     Sc = cache["k_q"].shape[2]
     slot = cache["length"] % Sc            # ring slot (== length pre-wrap)
     bidx = jnp.arange(B)
@@ -370,3 +475,79 @@ def attn_decode(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x1: jnp.ndarray,
         jnp.minimum(new["length"], Sc))
     y = qlinear(ctx, out.reshape(B, cfg.q_dim), p["wo"])
     return y[:, None], new
+
+
+def attn_chunk_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict,
+                       x: jnp.ndarray, rope, cache: Dict,
+                       tbl_row: jnp.ndarray, slot: jnp.ndarray,
+                       offset: jnp.ndarray, chunk_len: jnp.ndarray):
+    """One fixed-size chunk of an incremental (chunked) prefill, one slot.
+
+    x (1, C, d): chunk of the prompt whose first token sits at absolute
+    position ``offset``; only the first ``chunk_len`` rows are real (the
+    final chunk is right-padded). Queries attend to the ``offset`` tokens
+    already committed to the pool (gathered through ``tbl_row`` and
+    dequantized tile-by-tile at read, like decode) plus the chunk itself
+    (causal, exact bf16 K/V). The chunk's K/V are quantized and scattered
+    through the table, appending blocks the allocator grew for this chunk.
+
+    Note: history keys are read back *quantized*, so a chunked prefill is
+    numerically the serving-cache path, not bit-identical to a one-shot
+    prefill — same contract as any PagedAttention-style chunked prefill
+    over a quantized cache.
+    """
+    from repro.kernels.kvq_attn.ref import gather_paged_kv
+    B, C, _ = x.shape                                 # B == 1
+    q, k, v = _qkv(cfg, ctx, p, x, x, rope, None)
+    bs = cache["k_q"].shape[2]
+    T = tbl_row.shape[0]
+    Lh = T * bs
+    tbl = tbl_row[None]                               # (1, T)
+    # dequantized history, sequence-major (1, Lh, Hkv, D)
+    kh = (gather_paged_kv(cache["k_q"], tbl).astype(jnp.float32)
+          * gather_paged_kv(cache["s_k"], tbl)[..., None])
+    vh = (gather_paged_kv(cache["v_q"], tbl).astype(jnp.float32)
+          * gather_paged_kv(cache["s_v"], tbl)[..., None])
+    kh = jnp.swapaxes(kh, 1, 2)
+    vh = jnp.swapaxes(vh, 1, 2)
+    kall = jnp.concatenate([kh, k.astype(jnp.float32)], axis=1)
+    vall = jnp.concatenate([vh, v.astype(jnp.float32)], axis=1)
+    group = cfg.n_heads // cfg.n_kv_heads
+    if group > 1:
+        kall = jnp.repeat(kall, group, axis=2)
+        vall = jnp.repeat(vall, group, axis=2)
+    scale = cfg.resolved_head_dim ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32) * scale,
+                        kall)
+    # key j < Lh is history (valid iff j < offset: allocated-but-unwritten
+    # tail positions hold garbage); key j >= Lh is chunk token j - Lh
+    # (causal within the chunk, pad keys beyond chunk_len masked)
+    kj = jnp.arange(Lh + C)
+    qi = jnp.arange(C)
+    hist = kj < Lh
+    kpos = jnp.where(hist, kj, kj - Lh)
+    mask = jnp.where(hist[None, :], kpos[None, :] < offset,
+                     (kpos[None, :] <= qi[:, None])
+                     & (kpos[None, :] < chunk_len))
+    scores = jnp.where(mask[None, :, None, :], scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1)
+    pr = jnp.where(mask[None, :, None, :], pr, 0.0)
+    out = jnp.einsum("bqhk,bkhd->bqhd", pr, vall)
+    y = qlinear(ctx, out.reshape(B, C, cfg.q_dim).astype(x.dtype), p["wo"])
+    # commit the chunk through the table
+    k_q1, v_q1, s_k1, s_v1 = quantize_kv_for_cache(ctx, p, k, v)
+    abs_pos = offset + jnp.arange(C)
+    blk = tbl_row[jnp.minimum(abs_pos // bs, T - 1)]
+    blk = jnp.where(jnp.arange(C) < chunk_len, blk, cache["k_q"].shape[0])
+    off = abs_pos % bs
+    new = dict(cache)
+    new["k_q"] = cache["k_q"].at[blk, :, off].set(
+        jnp.swapaxes(k_q1[0], 0, 1), mode="drop")
+    new["v_q"] = cache["v_q"].at[blk, :, off].set(
+        jnp.swapaxes(v_q1[0], 0, 1), mode="drop")
+    new["s_k"] = cache["s_k"].at[blk, :, off].set(
+        jnp.swapaxes(s_k1[0], 0, 1), mode="drop")
+    new["s_v"] = cache["s_v"].at[blk, :, off].set(
+        jnp.swapaxes(s_v1[0], 0, 1), mode="drop")
+    new["length"] = cache["length"].at[slot].set(offset + chunk_len)
+    return y, new

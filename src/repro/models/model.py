@@ -138,6 +138,19 @@ def _rope_for(cfg: ModelConfig, batch: Dict, S: int):
     return rope_tables(jnp.arange(S), hd, cfg.rope_theta)
 
 
+def _ffn_tail(cfg, ctx, p, x, col=None):
+    """ln2 + MoE/MLP + residual — the post-attention half of an attention
+    block, shared by the forward/prefill, decode, and chunked-prefill
+    paths. Returns (x, moe_aux)."""
+    h = norm(x, p["ln2"], cfg.norm_type, cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = B.moe_fwd(cfg, ctx, p["moe"], h, subcol(col, "moe"))
+    else:
+        y = B.mlp_fwd(cfg, ctx, p["mlp"], h, subcol(col, "mlp"))
+        aux = jnp.float32(0.0)
+    return x + y, aux
+
+
 def _block_fwd(cfg, ctx, kind, p, x, consts, col, *, prefill=False):
     """Returns (x, aux, cache|None)."""
     aux = jnp.float32(0.0)
@@ -150,7 +163,8 @@ def _block_fwd(cfg, ctx, kind, p, x, consts, col, *, prefill=False):
             a, cache_sa = B.attn_prefill(
                 cfg, ctx, p["attn"], h, consts["rope"], subcol(col, "attn"),
                 window=window, cache_len=consts.get("cache_len", 0),
-                lengths=consts.get("lengths"))
+                lengths=consts.get("lengths"),
+                page_size=consts.get("page_size", 0))
             cache = {"self": cache_sa}
         else:
             a = B.attn_fwd(cfg, ctx, p["attn"], h, consts["rope"],
@@ -168,12 +182,7 @@ def _block_fwd(cfg, ctx, kind, p, x, consts, col, *, prefill=False):
                                subcol(col, "xattn"),
                                enc_out=consts["enc_out"])
             x = x + a
-        h = norm(x, p["ln2"], cfg.norm_type, cfg.norm_eps)
-        if cfg.is_moe:
-            y, aux = B.moe_fwd(cfg, ctx, p["moe"], h, subcol(col, "moe"))
-        else:
-            y = B.mlp_fwd(cfg, ctx, p["mlp"], h, subcol(col, "mlp"))
-        x = x + y
+        x, aux = _ffn_tail(cfg, ctx, p, x, col)
     elif kind == BLOCK_RGLRU:
         h = norm(x, p["ln1"], cfg.norm_type, cfg.norm_eps)
         if prefill:
@@ -299,29 +308,33 @@ def forward(cfg: ModelConfig, params: Dict, ctx: QuantCtx, batch: Dict,
 # --------------------------------------------------------------------------
 
 def prefill(cfg: ModelConfig, params: Dict, ctx: QuantCtx, batch: Dict,
-            cache_budget: int = 0):
+            cache_budget: int = 0, page_size: int = 0):
     """Forward pass that also emits the quantized serving cache.
 
     ``cache_budget``: total cache capacity (>= prompt length; extra room for
     decode steps). ``batch["lengths"]`` (B,) optionally marks the valid
     prefix of right-padded rows (batched mixed-length admission): logits are
     taken at each row's last *real* token and the cache records true
-    lengths/positions. Returns (logits, cache_pytree).
+    lengths/positions. ``page_size`` > 0 emits *block-shaped* attention
+    caches (B, nb, Hkv, page_size, D) for the paged serve engine to scatter
+    into its global pool (attention-only decoders). Returns
+    (logits, cache_pytree).
     """
     lengths = batch.get("lengths")
-    if lengths is not None and (
+    if (lengths is not None or page_size) and (
             cfg.is_encdec
             or any(k not in ATTENTION_BLOCKS for k in cfg.block_pattern)):
         # recurrent scans fold right-padding into their state; only causal
         # attention isolates real tokens from pads
         raise ValueError(
-            "batch['lengths'] (right-padded prefill) requires an "
-            f"attention-only decoder; {cfg.name!r} has block pattern "
-            f"{cfg.block_pattern}")
+            "batch['lengths'] (right-padded prefill) and page_size (paged "
+            "cache) require an attention-only decoder; "
+            f"{cfg.name!r} has block pattern {cfg.block_pattern}")
     x = _embed(cfg, params, batch)
     S = x.shape[1]
     consts = {"rope": _rope_for(cfg, batch, S), "enc_out": None,
-              "cache_len": cache_budget or S, "lengths": lengths}
+              "cache_len": cache_budget or S, "lengths": lengths,
+              "page_size": page_size}
     if cfg.is_encdec:
         consts["enc_out"] = _encode(cfg, ctx, params, batch, None)
     x, _, _, caches = _run_stack(cfg, ctx, params["segments"],
@@ -339,13 +352,14 @@ def prefill(cfg: ModelConfig, params: Dict, ctx: QuantCtx, batch: Dict,
     return logits, {"segments": caches, "position": position}
 
 
-def _block_decode(cfg, ctx, kind, p, x1, cache, positions):
+def _block_decode(cfg, ctx, kind, p, x1, cache, positions, block_tbl=None):
     if kind in ATTENTION_BLOCKS:
         window = (cfg.local_window if kind == BLOCK_LOCAL_ATTN
                   else cfg.sliding_window)
         h = norm(x1, p["ln1"], cfg.norm_type, cfg.norm_eps)
         a, new_sa = B.attn_decode(cfg, ctx, p["attn"], h, cache["self"],
-                                  positions, window=window)
+                                  positions, window=window,
+                                  block_tbl=block_tbl)
         x1 = x1 + a
         new_cache = {"self": new_sa}
         if "xattn" in p:
@@ -354,12 +368,8 @@ def _block_decode(cfg, ctx, kind, p, x1, cache, positions):
                                  positions, cross=True)
             x1 = x1 + a
             new_cache["cross"] = cache["cross"]
-        h = norm(x1, p["ln2"], cfg.norm_type, cfg.norm_eps)
-        if cfg.is_moe:
-            y, _ = B.moe_fwd(cfg, ctx, p["moe"], h)
-        else:
-            y = B.mlp_fwd(cfg, ctx, p["mlp"], h)
-        return x1 + y, new_cache
+        x1, _ = _ffn_tail(cfg, ctx, p, x1)
+        return x1, new_cache
     if kind == BLOCK_RGLRU:
         h = norm(x1, p["ln1"], cfg.norm_type, cfg.norm_eps)
         y, new_c = R.rglru_decode(cfg, ctx, p["rglru"], h, cache)
@@ -374,8 +384,14 @@ def _block_decode(cfg, ctx, kind, p, x1, cache, positions):
 
 def decode_step(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
                 tokens1: jnp.ndarray, cache: Dict):
-    """One decode step. tokens1 (B, 1) -> (logits (B, 1, V), new cache)."""
+    """One decode step. tokens1 (B, 1) -> (logits (B, 1, V), new cache).
+
+    A ``block_tbl`` key in the cache switches attention layers to the paged
+    layout: commits and reads route through the per-slot block table into
+    the global pool (see ``init_cache`` with ``num_blocks``).
+    """
     positions = cache["position"]
+    block_tbl = cache.get("block_tbl")
     batch = {"tokens": tokens1, "pos_offset": 0}
     x = jnp.take(params["embed"]["w"], tokens1, axis=0)
     if "pos_embed" in params:
@@ -392,14 +408,86 @@ def decode_step(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
             new_lc = {}
             for i, kind in enumerate(kinds):
                 xc, nc = _block_decode(cfg, ctx, kind, layer_p[str(i)], xc,
-                                       layer_c[str(i)], positions)
+                                       layer_c[str(i)], positions,
+                                       block_tbl)
                 new_lc[str(i)] = nc
             return xc, new_lc
         x, new_c = jax.lax.scan(body, x, (seg_p, seg_c))
         new_caches.append(new_c)
     x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
     logits = head_logits(cfg, params, ctx, x)
-    return logits, {"segments": new_caches, "position": positions + 1}
+    new_cache = {"segments": new_caches, "position": positions + 1}
+    if block_tbl is not None:
+        new_cache["block_tbl"] = block_tbl
+    return logits, new_cache
+
+
+def prefill_chunk(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
+                  tokens: jnp.ndarray, cache: Dict, slot: jnp.ndarray,
+                  offset: jnp.ndarray, chunk_len: jnp.ndarray,
+                  hist_blocks: int = 0):
+    """One chunk of an incremental (chunked) prefill for a single slot.
+
+    ``tokens`` (1, C) int32 is a fixed-size window of the prompt starting at
+    absolute position ``offset``; only the first ``chunk_len`` tokens are
+    real (the last chunk is right-padded, so every chunk compiles to the
+    same program). K/V blocks are committed through
+    ``cache["block_tbl"][slot]`` — the engine grows that slot's table to
+    cover ``offset + chunk_len`` tokens before calling. ``hist_blocks``
+    (trace-time constant > 0) truncates the table walk to the slot's first
+    ``hist_blocks`` entries so the history gather scales with the prompt,
+    not ``max_seq_len`` — it must cover ``offset + chunk_len`` tokens (the
+    engine buckets it to a power of two to bound compile variants).
+    Requires the paged attention-only cache (see ``init_cache`` with
+    ``num_blocks``).
+
+    Returns (logits (1, V) at the chunk's last real token, new cache) —
+    only the final chunk's logits are meaningful (they feed the first
+    sampled token).
+    """
+    if "block_tbl" not in cache:
+        raise ValueError("prefill_chunk requires a paged cache "
+                         "(init_cache(..., num_blocks=...))")
+    C = tokens.shape[1]
+    positions = offset + jnp.arange(C)
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)      # (1, C, d)
+    if "pos_embed" in params:
+        pe = params["pos_embed"]["w"]
+        x = x + jnp.take(pe, jnp.minimum(positions, pe.shape[0] - 1),
+                         axis=0)[None]
+    rope = None
+    if cfg.rope_theta:
+        rope = rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    tbl_row = cache["block_tbl"][slot]
+    if hist_blocks:
+        tbl_row = tbl_row[:hist_blocks]
+    new_segments = []
+    for seg_p, seg_c, (kinds, rep) in zip(params["segments"],
+                                          cache["segments"],
+                                          segment_plan(cfg)):
+        def body(xc, inp):
+            layer_p, layer_c = inp
+            new_lc = {}
+            for i, kind in enumerate(kinds):
+                p = layer_p[str(i)]
+                h = norm(xc, p["ln1"], cfg.norm_type, cfg.norm_eps)
+                a, new_sa = B.attn_chunk_prefill(
+                    cfg, ctx, p["attn"], h, rope, layer_c[str(i)]["self"],
+                    tbl_row, slot, offset, chunk_len)
+                xc = xc + a
+                xc, _ = _ffn_tail(cfg, ctx, p, xc)
+                new_lc[str(i)] = {"self": new_sa}
+            return xc, new_lc
+        x, new_c = jax.lax.scan(body, x, (seg_p, seg_c))
+        new_segments.append(new_c)
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    x_last = jnp.take_along_axis(
+        x, jnp.maximum(chunk_len - 1, 0)[None, None, None], axis=1)
+    logits = head_logits(cfg, params, ctx, x_last)[:, 0]
+    return logits, {
+        "segments": new_segments,
+        "position": cache["position"].at[slot].set(offset + chunk_len),
+        "block_tbl": cache["block_tbl"]}
 
 
 # --------------------------------------------------------------------------
@@ -407,13 +495,31 @@ def decode_step(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
 # --------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, ctx: QuantCtx, batch_size: int,
-               cache_len: int) -> Dict:
-    """Blank serving cache with total capacity ``cache_len``."""
+               cache_len: int, *, num_blocks: int = 0, page_size: int = 0,
+               table_len: int = 0) -> Dict:
+    """Blank serving cache with total capacity ``cache_len``.
+
+    ``num_blocks`` > 0 switches attention layers to the *paged* layout: one
+    global pool of ``num_blocks`` x ``page_size``-token quantized blocks per
+    layer plus a top-level ``block_tbl`` (batch_size, table_len) int32
+    mapping each slot's logical block i to a pool block (initialized to the
+    ``num_blocks`` sentinel = unallocated). Requires an attention-only,
+    non-windowed decoder — the host block allocator owns table contents.
+    """
     from repro.core.qat import cache_dtype
     qdt = cache_dtype(ctx)
+    if num_blocks and (cfg.is_encdec or cfg.sliding_window or any(
+            k != BLOCK_ATTN for k in cfg.block_pattern)):
+        raise ValueError(
+            "paged KV cache requires a full-attention decoder (no sliding "
+            f"window, no recurrence, no cross-attention); {cfg.name!r} has "
+            f"block pattern {cfg.block_pattern}")
 
     def block_cache(kind):
         if kind in ATTENTION_BLOCKS:
+            if num_blocks:
+                return {"self": B.init_paged_attn_cache(
+                    cfg, batch_size, num_blocks, page_size, dtype=qdt)}
             window = (cfg.local_window if kind == BLOCK_LOCAL_ATTN
                       else cfg.sliding_window)
             c = {"self": B.init_attn_cache(cfg, batch_size, cache_len,
@@ -433,5 +539,9 @@ def init_cache(cfg: ModelConfig, ctx: QuantCtx, batch_size: int,
         layer = {str(i): block_cache(kind) for i, kind in enumerate(kinds)}
         segments.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (rep,) + x.shape), layer))
-    return {"segments": segments,
-            "position": jnp.zeros((batch_size,), jnp.int32)}
+    cache = {"segments": segments,
+             "position": jnp.zeros((batch_size,), jnp.int32)}
+    if num_blocks:
+        cache["block_tbl"] = jnp.full(
+            (batch_size, table_len or num_blocks), num_blocks, jnp.int32)
+    return cache

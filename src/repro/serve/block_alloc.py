@@ -1,0 +1,101 @@
+"""Host-side block allocator for the paged quantized KV cache.
+
+The device holds one global pool of fixed-size cache blocks per attention
+layer (``(num_blocks, Hkv, block_size, D)`` int8 + per-token scales); this
+allocator owns the free list and decides which pool blocks back which slot.
+The engine mirrors the resulting ``(slots, table_len)`` block table on the
+host and pushes it to the device at admission/chunk boundaries, so the
+compiled decode program only ever *reads* the table.
+
+Accounting is reservation-based: admission reserves a slot's worst-case
+block count (``ceil((prompt + max_new - 1) / block_size)``) up front, which
+guarantees a resident request can never strand mid-decode on an empty pool,
+while physical blocks are still handed out lazily — only once decode (or a
+prefill chunk) actually crosses a block boundary. Requests that finish
+early (EOS) therefore never touch their tail blocks, and ``peak_blocks``
+records true residency, not the reservation.
+
+Entries never allocated stay at the ``num_blocks`` sentinel, which the
+device-side scatters drop (``mode="drop"``) and gathers clamp.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` cache blocks of
+    ``block_size`` tokens, with per-slot reservation accounting."""
+
+    def __init__(self, num_blocks: int, block_size: int, slots: int,
+                 table_len: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("num_blocks and block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.table_len = table_len
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owned: Dict[int, List[int]] = {}      # slot -> block ids
+        self._reserved: Dict[int, int] = {}         # slot -> blocks not yet
+        self.peak_blocks = 0                        #         allocated
+        # host mirror of the device block table; sentinel = num_blocks
+        self.tables = np.full((slots, table_len), num_blocks, np.int32)
+
+    # ---- accounting ----
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks neither allocated nor promised to a resident slot."""
+        return len(self._free) - sum(self._reserved.values())
+
+    # ---- lifecycle ----
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        """Reserve the slot's worst-case block count; False if the pool
+        can't honor it right now (the request stays queued)."""
+        nb = self.blocks_for_tokens(n_tokens)
+        if nb > self.free_blocks or slot in self._reserved:
+            return False
+        self._reserved[slot] = nb
+        self._owned[slot] = []
+        return True
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow the slot's table to cover ``n_tokens``; returns True if any
+        new block was allocated (the device table needs a push)."""
+        need = self.blocks_for_tokens(n_tokens)
+        owned = self._owned[slot]
+        if need > self.table_len:
+            raise ValueError(
+                f"slot {slot} needs {need} blocks but the block table is "
+                f"only {self.table_len} entries wide")
+        grew = False
+        while len(owned) < need:
+            if self._reserved[slot] <= 0 or not self._free:
+                raise RuntimeError(
+                    f"slot {slot} outgrew its reservation "
+                    f"({len(owned)} owned, {self._reserved[slot]} reserved, "
+                    f"{len(self._free)} free) — admission accounting bug")
+            self._reserved[slot] -= 1
+            bid = self._free.pop()
+            self.tables[slot, len(owned)] = bid
+            owned.append(bid)
+            grew = True
+        self.peak_blocks = max(self.peak_blocks, self.allocated_blocks)
+        return grew
+
+    def release(self, slot: int) -> int:
+        """Free the slot's blocks and drop its remaining reservation.
+        Returns the number of blocks returned to the pool."""
+        owned = self._owned.pop(slot, [])
+        self._reserved.pop(slot, None)
+        self._free.extend(owned)
+        self.tables[slot, :] = self.num_blocks
+        return len(owned)

@@ -14,19 +14,31 @@ admission boundaries:
   ``decode_block`` steps per compiled call and stops early once every slot
   is inactive. No ``int(...)`` / ``np.asarray`` per token — the host syncs
   once per chunk to harvest finished slots and admit new work.
+* **Paged KV cache** (``kv_layout="paged"``) — instead of reserving a dense
+  ``cache_len`` stripe per slot, attention layers share one global pool of
+  fixed-size quantized blocks addressed through a per-slot block table
+  (``serve.block_alloc`` owns the free list on the host). Admission switches
+  from "fits in cache_len" to "enough free blocks", blocks are allocated
+  lazily as decode crosses block boundaries, and harvest returns them to the
+  pool — so capacity tracks actual token residency, not the worst-case
+  request. Prompts longer than ``prefill_chunk`` are admitted as a sequence
+  of fixed-size **chunked prefill** calls that append blocks incrementally
+  (``models.prefill_chunk``), removing the cache_len bound on prompt length.
 * **Scheduler** (``serve.scheduler``) — pluggable FCFS / shortest-prompt
-  policies plus per-request TTFT/latency accounting.
+  policies plus per-request TTFT/latency accounting; paged admission uses
+  its head-of-line ``admit_ok`` hook so big requests aren't starved.
 
 All per-slot cache state (int8 KV / recurrent) stays in one pytree so the
 decode chunk is a single compiled program regardless of slot occupancy;
-inactive slots ride along masked (their commits are dropped) and are
+inactive slots ride along masked (their commits are dropped — in paged mode
+by parking their block-table rows on the out-of-range sentinel) and are
 recycled by the next admission.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +47,12 @@ import numpy as np
 from repro.configs.base import ATTENTION_BLOCKS, BLOCK_ATTN, ModelConfig
 from repro.core.qat import make_ctx
 from repro.models import decode_step, init_cache, prefill
+from repro.models import prefill_chunk as model_prefill_chunk
+from repro.serve.block_alloc import BlockAllocator
 from repro.serve.sampling import TOP_K_CAP, fold_step, sample_tokens
 from repro.serve.scheduler import Scheduler
+
+_POOL_KEYS = ("k_q", "v_q", "s_k", "s_v")   # pool-shaped paged cache leaves
 
 
 @dataclass(eq=False)                    # identity equality: the ndarray
@@ -56,15 +72,19 @@ class Request:                          # prompt field breaks value __eq__
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, policy: str = "A8d-C8-W4",
                  slots: int = 8, cache_len: int = 512,
-                 max_new_cap: int = 256, decode_block: int = 8,
-                 sched_policy: str = "fcfs", prefill_bucket: int = 16):
+                 max_new_cap: int = 256,
+                 decode_block: Union[int, str] = 8,
+                 sched_policy: str = "fcfs", prefill_bucket: int = 16,
+                 kv_layout: str = "dense", block_size: int = 64,
+                 num_blocks: Optional[int] = None,
+                 max_seq_len: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.ctx = make_ctx(policy)
         self.slots = slots
         self.cache_len = cache_len
         self.max_new_cap = max_new_cap
-        self.decode_block = decode_block
         self.prefill_bucket = prefill_bucket
         self.scheduler = Scheduler(sched_policy)
         # right-padded batched prefill is exact only when every block is
@@ -77,6 +97,35 @@ class ServeEngine:
         # ring-buffered / recurrent state is not
         self._cache_bound = (BLOCK_ATTN in cfg.block_pattern
                              and not cfg.sliding_window)
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
+                             f"got {kv_layout!r}")
+        self._paged = kv_layout == "paged"
+        if self._paged:
+            if (cfg.is_encdec or cfg.sliding_window
+                    or any(k != BLOCK_ATTN for k in cfg.block_pattern)):
+                raise ValueError(
+                    "kv_layout='paged' requires a full-attention decoder "
+                    "(no sliding window / recurrence / cross-attention); "
+                    f"{cfg.name!r} has block pattern {cfg.block_pattern}")
+            self.block_size = block_size
+            # default pool = the dense engine's total reservation, so the
+            # two layouts are comparable at equal HBM
+            self.num_blocks = num_blocks or max(
+                1, slots * cache_len // block_size)
+            # default per-request cap matches the dense stripe: the table
+            # width bounds how many keys each decode step walks, so leaving
+            # it at the whole pool would cost slots-times the attention
+            # work of the dense layout
+            self.max_seq_len = max_seq_len or min(
+                cache_len, self.num_blocks * block_size)
+            self.table_len = -(-self.max_seq_len // block_size)
+            self.prefill_chunk = prefill_chunk or 4 * prefill_bucket
+        auto_block = decode_block == "auto"
+        self.decode_block = 8 if auto_block else int(decode_block)
+        self.reset()
+        if auto_block:
+            self.decode_block = self._probe_decode_block()
         # greedy_only is a trace-time constant: two compiled variants at
         # most. The state pytree is donated so the slot caches are updated
         # in place (no 2x cache copy per chunk; a no-op on backends
@@ -85,7 +134,16 @@ class ServeEngine:
                                    donate_argnums=(1,))
         self._admit_jit = jax.jit(self._admit_batch, static_argnums=(10,),
                                   donate_argnums=(1,))
-        self.reset()
+        if self._paged:
+            self._admit_paged_jit = jax.jit(
+                self._admit_batch_paged, static_argnums=(11,),
+                donate_argnums=(1,))
+            self._chunk_jit = jax.jit(
+                lambda params, cache, toks, slot, off, clen, hb:
+                model_prefill_chunk(self.cfg, params, self.ctx, toks,
+                                    cache, slot, off, clen,
+                                    hist_blocks=hb),
+                static_argnums=(6,), donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     # Compiled programs
@@ -124,6 +182,25 @@ class ServeEngine:
         st.pop("i")
         return st
 
+    def _post_prefill_state(self, state, new_cache, first, slot_idx, eos,
+                            max_new, temp, top_k, keys):
+        """Scatter n freshly-prefilled rows' sampling/output state into
+        their slots (shared by the dense and paged admission programs)."""
+        out = state["out"].at[slot_idx].set(0, mode="drop")
+        return {**state, "cache": new_cache,
+                "tokens": state["tokens"].at[slot_idx, 0].set(first,
+                                                              mode="drop"),
+                "out": out.at[slot_idx, 0].set(first, mode="drop"),
+                "n_gen": state["n_gen"].at[slot_idx].set(1, mode="drop"),
+                "active": state["active"].at[slot_idx].set(
+                    (first != eos) & (max_new > 1), mode="drop"),
+                "eos": state["eos"].at[slot_idx].set(eos, mode="drop"),
+                "max_new": state["max_new"].at[slot_idx].set(max_new,
+                                                             mode="drop"),
+                "temp": state["temp"].at[slot_idx].set(temp, mode="drop"),
+                "top_k": state["top_k"].at[slot_idx].set(top_k, mode="drop"),
+                "keys": state["keys"].at[slot_idx].set(keys, mode="drop")}
+
     def _admit_batch(self, params, state, tokens, lengths, slot_idx, eos,
                      max_new, temp, top_k, keys, greedy_only):
         """One batched prefill + scatter of n fresh rows into their slots.
@@ -149,30 +226,59 @@ class ServeEngine:
         new_cache = {"segments": segments,
                      "position": cache["position"].at[slot_idx].set(
                          cache_n["position"], mode="drop")}
-        out = state["out"].at[slot_idx].set(0, mode="drop")
-        return {**state, "cache": new_cache,
-                "tokens": state["tokens"].at[slot_idx, 0].set(first,
-                                                              mode="drop"),
-                "out": out.at[slot_idx, 0].set(first, mode="drop"),
-                "n_gen": state["n_gen"].at[slot_idx].set(1, mode="drop"),
-                "active": state["active"].at[slot_idx].set(
-                    (first != eos) & (max_new > 1), mode="drop"),
-                "eos": state["eos"].at[slot_idx].set(eos, mode="drop"),
-                "max_new": state["max_new"].at[slot_idx].set(max_new,
-                                                             mode="drop"),
-                "temp": state["temp"].at[slot_idx].set(temp, mode="drop"),
-                "top_k": state["top_k"].at[slot_idx].set(top_k, mode="drop"),
-                "keys": state["keys"].at[slot_idx].set(keys, mode="drop")}
+        return self._post_prefill_state(state, new_cache, first, slot_idx,
+                                        eos, max_new, temp, top_k, keys)
+
+    def _admit_batch_paged(self, params, state, tokens, lengths, slot_idx,
+                           blk_ids, eos, max_new, temp, top_k, keys,
+                           greedy_only):
+        """Paged admission: prefill emits block-shaped caches, scattered
+        into the global pool through the rows' allocated block ids.
+
+        ``blk_ids`` (n, nb) int32: pool destinations for each row's prompt
+        blocks; entries past a row's ``ceil(len/bs)`` blocks (and whole
+        padding rows) hold the out-of-range sentinel and drop.
+        """
+        batch = {"tokens": tokens, "lengths": lengths}
+        logits, cache_n = prefill(self.cfg, params, self.ctx, batch,
+                                  page_size=self.block_size)
+        n = tokens.shape[0]
+        first = sample_tokens(logits[:, 0],
+                              fold_step(keys, jnp.zeros((n,), jnp.int32)),
+                              temp, top_k, greedy_only=greedy_only)
+        cache = state["cache"]
+
+        def scatter(path, d, s):
+            if getattr(path[-1], "key", None) in _POOL_KEYS:
+                # d (rep, NB, ...), s (rep, n, nb, ...): block scatter
+                return d.at[:, blk_ids].set(s, mode="drop")
+            return d.at[:, slot_idx].set(s, mode="drop")   # per-slot leaves
+
+        segments = [jax.tree_util.tree_map_with_path(scatter, ds, ss)
+                    for ds, ss in zip(cache["segments"],
+                                      cache_n["segments"])]
+        new_cache = {"segments": segments,
+                     "position": cache["position"].at[slot_idx].set(
+                         cache_n["position"], mode="drop"),
+                     "block_tbl": cache["block_tbl"]}
+        return self._post_prefill_state(state, new_cache, first, slot_idx,
+                                        eos, max_new, temp, top_k, keys)
 
     # ------------------------------------------------------------------
     # Request lifecycle (host side)
     # ------------------------------------------------------------------
 
-    def reset(self) -> None:
-        """Clear all serving state but keep compiled programs warm."""
+    def _blank_state(self) -> Dict:
         slots = self.slots
-        self.state = {
-            "cache": init_cache(self.cfg, self.ctx, slots, self.cache_len),
+        if self._paged:
+            cache = init_cache(self.cfg, self.ctx, slots, self.cache_len,
+                               num_blocks=self.num_blocks,
+                               page_size=self.block_size,
+                               table_len=self.table_len)
+        else:
+            cache = init_cache(self.cfg, self.ctx, slots, self.cache_len)
+        return {
+            "cache": cache,
             "tokens": jnp.zeros((slots, 1), jnp.int32),
             "out": jnp.zeros((slots, self.max_new_cap), jnp.int32),
             "n_gen": jnp.zeros((slots,), jnp.int32),
@@ -185,10 +291,24 @@ class ServeEngine:
             "steps": jnp.int32(0),
             "committed": jnp.int32(0),
         }
+
+    def reset(self) -> None:
+        """Clear all serving state but keep compiled programs warm."""
+        self.state = self._blank_state()
+        self.alloc = (BlockAllocator(self.num_blocks, self.block_size,
+                                     self.slots, self.table_len)
+                      if self._paged else None)
         self._slot_req = {}
+        self._written: Dict[int, int] = {}   # paged: tokens committed/slot
+        self._tbl_dirty = False              # host table mirror vs device
+        self._chunk_job: Optional[Dict] = None   # in-progress chunked prefill
+        self._max_residents = 0
         self.scheduler = Scheduler(self.scheduler.policy)
         self._host = {"decode_s": 0.0, "prefill_s": 0.0, "prefill_calls": 0,
-                      "prefill_tokens": 0}
+                      "prefill_tokens": 0, "prefill_chunks": 0}
+        self._cache_bytes = sum(
+            leaf.nbytes for seg in self.state["cache"]["segments"]
+            for leaf in jax.tree.leaves(seg))
 
     def submit(self, req: Request) -> None:
         if req.max_new_tokens > self.max_new_cap:
@@ -201,23 +321,97 @@ class ServeEngine:
                              f"{TOP_K_CAP} (static sampling bound)")
         # peak cache occupancy is prompt + max_new - 1: the last sampled
         # token is returned but its KV is never written while resident
-        if self._cache_bound and \
-                len(req.prompt) + req.max_new_tokens - 1 > self.cache_len:
+        need = len(req.prompt) + req.max_new_tokens - 1
+        if self._paged:
+            if need > self.max_seq_len:
+                raise ValueError(
+                    f"request needs {need} cache tokens (prompt "
+                    f"{len(req.prompt)} + max_new_tokens "
+                    f"{req.max_new_tokens} - 1) but max_seq_len="
+                    f"{self.max_seq_len}; raise max_seq_len or shorten "
+                    f"the request")
+            nb = self.alloc.blocks_for_tokens(need)
+            if nb > self.num_blocks:
+                raise ValueError(
+                    f"request needs {nb} cache blocks ({need} tokens at "
+                    f"block_size={self.block_size}) but the pool only has "
+                    f"num_blocks={self.num_blocks}, so it can never be "
+                    f"admitted; raise num_blocks")
+        elif self._cache_bound and need > self.cache_len:
             raise ValueError(
-                f"prompt ({len(req.prompt)}) + max_new_tokens "
-                f"({req.max_new_tokens}) - 1 exceeds cache_len="
-                f"{self.cache_len} on a full-attention model; raise "
-                f"cache_len or shorten the request")
+                f"request needs {need} cache tokens (prompt "
+                f"{len(req.prompt)} + max_new_tokens {req.max_new_tokens} "
+                f"- 1) but cache_len={self.cache_len} on a full-attention "
+                f"model; raise cache_len or shorten the request")
         self.scheduler.submit(req)
 
+    def _note_residency(self) -> None:
+        n = len(self._slot_req) + (self._chunk_job is not None)
+        self._max_residents = max(self._max_residents, n)
+
     def _admit(self) -> None:
-        free = [s for s in range(self.slots) if s not in self._slot_req]
+        if self._paged:
+            self._admit_paged()
+            return
+        free = self._free_slots()
         if not free or not self.scheduler.pending:
             return
         reqs = self.scheduler.select(len(free),
                                      equal_length_only=not self._pad_ok)
         if not reqs:
             return
+        self._admit_wave(reqs, free[:len(reqs)])
+        self._note_residency()
+
+    def _free_slots(self) -> List[int]:
+        busy = set(self._slot_req)
+        if self._chunk_job is not None:
+            busy.add(self._chunk_job["slot"])
+        return [s for s in range(self.slots) if s not in busy]
+
+    def _admit_paged(self) -> None:
+        """Paged admission loop: free-block criterion with head-of-line
+        blocking; prompts longer than ``prefill_chunk`` start a chunked
+        prefill job that ``step`` advances one chunk at a time (decode for
+        resident slots keeps running between chunks)."""
+        while self.scheduler.pending:
+            free = self._free_slots()
+            if not free:
+                return
+            head = self.scheduler.first()
+            need = len(head.prompt) + head.max_new_tokens - 1
+            if len(head.prompt) > self.prefill_chunk:
+                if self._chunk_job is not None:
+                    return                  # one chunked admission at a time
+                if not self.alloc.reserve(free[0], need):
+                    return                  # pool exhausted: head waits
+                self.scheduler.take(head)
+                self._chunk_job = {"req": head, "slot": free[0], "c0": 0}
+                self._note_residency()
+                continue
+            taken: List[int] = []
+
+            def ok(r):
+                if len(r.prompt) > self.prefill_chunk:
+                    return False            # long prompt: chunked next round
+                if not self.alloc.reserve(
+                        free[len(taken)],
+                        len(r.prompt) + r.max_new_tokens - 1):
+                    return False
+                taken.append(free[len(taken)])
+                return True
+
+            reqs = self.scheduler.select(len(free), admit_ok=ok)
+            if not reqs:
+                return
+            # lazy prefill allocation: just the prompt's blocks for now
+            for s, r in zip(taken, reqs):
+                self._ensure(s, len(r.prompt))
+            self._admit_wave(reqs, taken, paged=True)
+            self._note_residency()
+
+    def _admit_wave(self, reqs, taken, paged: bool = False) -> None:
+        """One batched prefill admission (dense or paged)."""
         n = len(reqs)
         # pad the admission batch up to a power of two (dummy rows scatter
         # out of range and drop) so compile variants are O(log slots) per
@@ -237,7 +431,7 @@ class ServeEngine:
         for i, r in enumerate(reqs):
             toks[i, :lens[i]] = r.prompt[:L]
         slot_idx = np.full((n_pad,), self.slots, np.int32)   # dummy: dropped
-        slot_idx[:n] = free[:n]
+        slot_idx[:n] = taken[:n]
         keys = np.zeros((n_pad, 2), np.uint32)
         keys[:n] = np.stack([jax.random.fold_in(jax.random.PRNGKey(r.seed),
                                                 r.uid) for r in reqs])
@@ -249,21 +443,111 @@ class ServeEngine:
 
         greedy_only = all(r.temperature <= 0.0 for r in reqs)
         t0 = time.perf_counter()
-        self.state = self._admit_jit(
-            self.params, self.state, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(slot_idx),
-            col(lambda r: r.eos_id, -1, np.int32),
-            col(lambda r: r.max_new_tokens, 1, np.int32),
-            col(lambda r: r.temperature, 0.0, np.float32),
-            col(lambda r: r.top_k, 0, np.int32), jnp.asarray(keys),
-            greedy_only)
+        common = (jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(slot_idx))
+        tail = (col(lambda r: r.eos_id, -1, np.int32),
+                col(lambda r: r.max_new_tokens, 1, np.int32),
+                col(lambda r: r.temperature, 0.0, np.float32),
+                col(lambda r: r.top_k, 0, np.int32), jnp.asarray(keys),
+                greedy_only)
+        if paged:
+            # prefill emits ceil(L / block_size) blocks per row (bucket-
+            # padded); rows point their own allocated blocks at the pool
+            # and sentinel out both their tail blocks and the dummy rows
+            nb = self.alloc.blocks_for_tokens(L)
+            ids = np.full((n_pad, nb), self.num_blocks, np.int32)
+            for i, (s, r) in enumerate(zip(taken, reqs)):
+                nb_i = self.alloc.blocks_for_tokens(len(r.prompt))
+                ids[i, :nb_i] = self.alloc.tables[s, :nb_i]
+            self._push_tables()
+            self.state = self._admit_paged_jit(
+                self.params, self.state, *common, jnp.asarray(ids), *tail)
+        else:
+            self.state = self._admit_jit(self.params, self.state, *common,
+                                         *tail)
         jax.block_until_ready(self.state["tokens"])
         self._host["prefill_s"] += time.perf_counter() - t0
         self._host["prefill_calls"] += 1
         self._host["prefill_tokens"] += n     # first token of each request
         self.scheduler.on_admitted(reqs)
-        for s, r in zip(slot_idx.tolist(), reqs):
+        for s, r in zip(taken, reqs):
             self._slot_req[s] = r
+            if self._paged:
+                self._written[s] = len(r.prompt)
+
+    def _advance_chunk_job(self) -> None:
+        """Run ONE prefill chunk of the in-progress chunked admission
+        (prompts longer than ``prefill_chunk``), appending cache blocks
+        incrementally. One chunk per engine step: resident slots keep
+        decoding between chunks, so a long prompt can't freeze everyone
+        else's inter-token latency. The final chunk samples the first
+        token and arms the slot exactly like a batched admission."""
+        job = self._chunk_job
+        req, slot, c0 = job["req"], job["slot"], job["c0"]
+        C = self.prefill_chunk
+        plen = len(req.prompt)
+        t0 = time.perf_counter()
+        cl = min(C, plen - c0)
+        self._ensure(slot, c0 + cl)
+        self._push_tables()
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :cl] = req.prompt[c0:c0 + cl]
+        # table walk bounded by the tokens this chunk can touch, bucketed
+        # to a power of two to bound compile variants
+        hb = 1
+        while hb < self.alloc.blocks_for_tokens(c0 + C):
+            hb *= 2
+        logits, self.state["cache"] = self._chunk_jit(
+            self.params, self.state["cache"], jnp.asarray(toks),
+            jnp.int32(slot), jnp.int32(c0), jnp.int32(cl),
+            min(hb, self.table_len))
+        self._host["prefill_chunks"] += 1
+        job["c0"] = c0 + C
+        if job["c0"] < plen:                # more chunks to go
+            jax.block_until_ready(self.state["cache"]["position"])
+            self._host["prefill_s"] += time.perf_counter() - t0
+            return
+        keys = jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                  req.uid)[None]
+        temp = jnp.asarray([req.temperature], jnp.float32)
+        top_k = jnp.asarray([req.top_k], jnp.int32)
+        first = sample_tokens(
+            logits, fold_step(keys, jnp.zeros((1,), jnp.int32)), temp,
+            top_k, greedy_only=req.temperature <= 0.0)
+        self.state = self._post_prefill_state(
+            self.state, self.state["cache"], first,
+            jnp.asarray([slot], jnp.int32),
+            jnp.asarray([req.eos_id], jnp.int32),
+            jnp.asarray([req.max_new_tokens], jnp.int32), temp, top_k,
+            keys)
+        jax.block_until_ready(self.state["tokens"])
+        self._host["prefill_s"] += time.perf_counter() - t0
+        self._host["prefill_calls"] += 1
+        self._host["prefill_tokens"] += 1
+        self.scheduler.on_admitted([req])
+        self._slot_req[slot] = req
+        self._written[slot] = plen
+        self._chunk_job = None
+
+    def _ensure(self, slot: int, n_tokens: int) -> None:
+        if self.alloc.ensure(slot, n_tokens):
+            self._tbl_dirty = True
+
+    def _push_tables(self) -> None:
+        """Push the host block-table mirror to the device iff it changed
+        since the last push (block growth or a harvest-time release — the
+        release is what retires freed slots' rows to the sentinel so their
+        masked commits drop)."""
+        if self._tbl_dirty:
+            self.state["cache"]["block_tbl"] = jnp.asarray(self.alloc.tables)
+            self._tbl_dirty = False
+
+    def _ensure_decode_blocks(self) -> None:
+        """Grow resident slots' block tables to cover the upcoming decode
+        chunk (lazy allocation at block-boundary crossings)."""
+        for s, r in self._slot_req.items():
+            cap = len(r.prompt) + r.max_new_tokens - 1
+            self._ensure(s, min(self._written[s] + self.decode_block, cap))
+        self._push_tables()
 
     def _harvest(self) -> None:
         """Admission-boundary sync: pull finished slots' token buffers."""
@@ -271,6 +555,13 @@ class ServeEngine:
             return
         act, n_gen = jax.device_get((self.state["active"],
                                      self.state["n_gen"]))
+        if self._paged:
+            # a slot still active after a chunk ran every one of its steps
+            for s, r in self._slot_req.items():
+                if act[s]:
+                    cap = len(r.prompt) + r.max_new_tokens - 1
+                    self._written[s] = min(
+                        self._written[s] + self.decode_block, cap)
         finished = [s for s in self._slot_req if not act[s]]
         if not finished:
             return
@@ -280,18 +571,27 @@ class ServeEngine:
             req.generated = rows[i, :n_gen[s]].tolist()
             req.done = True
             self.scheduler.on_finished(req)
+            if self._paged:
+                self.alloc.release(s)       # blocks return to the pool
+                self._written.pop(s, None)
+                self._tbl_dirty = True      # row parked on the sentinel
 
     # ------------------------------------------------------------------
     # Drive
     # ------------------------------------------------------------------
 
     def step(self) -> None:
-        """One admission + one on-device decode chunk + harvest."""
+        """One admission + at most one prefill chunk of an in-progress
+        chunked admission + one on-device decode chunk + harvest."""
         self._admit()
+        if self._chunk_job is not None:
+            self._advance_chunk_job()
         if self._slot_req:
             greedy_only = all(r.temperature <= 0.0
                               for r in self._slot_req.values())
             t0 = time.perf_counter()
+            if self._paged:
+                self._ensure_decode_blocks()
             self.state = self._decode_jit(self.params, self.state,
                                           greedy_only)
             self._harvest()               # device_get doubles as the sync
@@ -314,12 +614,65 @@ class ServeEngine:
         drain, in-flight requests keep their partial ``generated`` output
         (``done`` stays False)."""
         chunks = 0
-        while ((self.scheduler.pending or self._slot_req)
+        while ((self.scheduler.pending or self._slot_req
+                or self._chunk_job is not None)
                and chunks * self.decode_block < max_steps):
             self.step()
             chunks += 1
         self._flush_partial()
         return self.stats()
+
+    # ------------------------------------------------------------------
+    # decode_block auto-tuning
+    # ------------------------------------------------------------------
+
+    def _probe_state(self) -> Dict:
+        """Fresh state with every slot armed to run a full decode chunk."""
+        st = self._blank_state()
+        st["active"] = jnp.ones((self.slots,), bool)
+        st["max_new"] = jnp.full((self.slots,), self.max_new_cap, jnp.int32)
+        return st
+
+    def _probe_decode_block(self, candidates=(4, 8, 16, 32)) -> int:
+        """Measured decode-step latency probe (``decode_block="auto"``).
+
+        Times one compiled decode chunk at lengths 1 and 8 to split the
+        per-chunk cost into a fixed part (dispatch + the host sync that
+        follows every chunk) and a per-step part, then picks the smallest
+        candidate whose amortized fixed cost is under 15% of compute —
+        bigger chunks waste steps on slots that finish mid-chunk, so we
+        want the smallest chunk that the host overhead can afford.
+        Passing an int ``decode_block`` to the constructor overrides this.
+        """
+        def chunk_time(c: int) -> float:
+            self.decode_block = c
+            # donate each probe state: the probe must not stack extra full
+            # cache pytrees on top of the engine's own state (the paged
+            # pool can be sized near device HBM)
+            fn = jax.jit(self._decode_chunk, static_argnums=(2,),
+                         donate_argnums=(1,))
+            jax.block_until_ready(
+                fn(self.params, self._probe_state(), True)["tokens"])
+            best = float("inf")
+            for _ in range(3):          # min-of-N: shed host scheduler noise
+                st = self._probe_state()
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(self.params, st, True)["tokens"])
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        t1 = chunk_time(1)
+        t8 = chunk_time(8)
+        per_step = max((t8 - t1) / 7.0, 1e-9)
+        overhead = max(t1 - per_step, 0.0)
+        for c in candidates:
+            if overhead <= 0.15 * c * per_step:
+                return c
+        return candidates[-1]
+
+    # ------------------------------------------------------------------
+    # Stats
+    # ------------------------------------------------------------------
 
     def stats(self) -> Dict:
         steps, committed = jax.device_get((self.state["steps"],
@@ -329,5 +682,20 @@ class ServeEngine:
         d["decode_steps"] = int(steps)
         d["tokens_out"] = int(committed) + prefill_tokens
         d["decode_step_s"] = (d["decode_s"] / max(int(steps), 1))
+        d["max_residents"] = self._max_residents
+        if self._paged:
+            cap_tokens = self.num_blocks * self.block_size
+            d["cache_tokens_capacity"] = cap_tokens
+            d["peak_cache_tokens"] = self.alloc.peak_blocks * self.block_size
+        else:
+            cap_tokens = self.slots * self.cache_len
+            d["cache_tokens_capacity"] = cap_tokens
+            # a dense stripe is reserved whole for a slot's lifetime:
+            # reservation *is* usage, fragmentation included — but only
+            # for the stripes that were actually occupied at peak
+            d["peak_cache_tokens"] = self._max_residents * self.cache_len
+        d["cache_bytes"] = self._cache_bytes
+        d["peak_cache_bytes"] = int(
+            self._cache_bytes * d["peak_cache_tokens"] / max(cap_tokens, 1))
         d.update(self.scheduler.stats())
         return d

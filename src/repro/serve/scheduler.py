@@ -80,21 +80,40 @@ class Scheduler:
                           key=lambda r: (len(r.prompt), r._arrival))
         return list(self._queue)
 
-    def select(self, max_n: int, *, equal_length_only: bool = False) -> List:
+    def first(self):
+        """Policy-ordered head of the queue (None when empty). The paged
+        engine peeks it to route long prompts into chunked admission."""
+        return self._ordered()[0] if self._queue else None
+
+    def take(self, req) -> None:
+        """Remove a specific queued request (paired with ``first``)."""
+        self._queue.remove(req)
+
+    def select(self, max_n: int, *, equal_length_only: bool = False,
+               admit_ok=None) -> List:
         """Pop up to ``max_n`` requests for one batched prefill.
 
         ``equal_length_only``: restrict the batch to the leader's exact
         prompt length (recurrent caches can't absorb right-padding).
+        ``admit_ok``: per-request admission predicate (e.g. "enough free
+        cache blocks"). Selection stops at the first failing request —
+        head-of-line blocking, so a big request can't be starved by smaller
+        ones arriving behind it. The predicate may commit resources
+        (reservations) for requests it accepts: everything it accepted is
+        admitted.
         """
         if max_n <= 0 or not self._queue:
             return []
         ordered = self._ordered()
-        batch = [ordered[0]]
-        for r in ordered[1:]:
+        batch: List = []
+        for r in ordered:
             if len(batch) >= max_n:
                 break
-            if equal_length_only and len(r.prompt) != len(batch[0].prompt):
+            if batch and equal_length_only and \
+                    len(r.prompt) != len(batch[0].prompt):
                 continue
+            if admit_ok is not None and not admit_ok(r):
+                break
             batch.append(r)
         for r in batch:
             self._queue.remove(r)

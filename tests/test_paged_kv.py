@@ -1,0 +1,249 @@
+"""Paged quantized KV cache: block-allocator accounting, engine lifecycle
+(exhaustion queues instead of crashing, blocks return on harvest,
+fragmentation stress), and block-table kvq_attn kernel parity vs the XLA
+reference on CPU (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.kernels.kvq_attn.ops import kvq_paged_decode_attn
+from repro.kernels.kvq_attn.ref import (gather_paged_kv,
+                                        kvq_paged_decode_attn_ref)
+from repro.models import init_params
+from repro.serve.block_alloc import BlockAllocator
+from repro.serve.engine import Request, ServeEngine
+
+
+def _req(uid, plen, **kw):
+    return Request(uid=uid, prompt=np.arange(plen, dtype=np.int32), **kw)
+
+
+class TestBlockAllocator:
+    def test_reserve_then_exhaustion_refuses(self):
+        a = BlockAllocator(num_blocks=4, block_size=8, slots=4, table_len=4)
+        assert a.reserve(0, 20)            # 3 blocks
+        assert not a.reserve(1, 16)        # 2 blocks > 1 unreserved
+        assert a.reserve(1, 8)             # exactly the last block
+        assert a.free_blocks == 0
+
+    def test_lazy_allocation_and_peak(self):
+        a = BlockAllocator(num_blocks=8, block_size=8, slots=2, table_len=8)
+        assert a.reserve(0, 32)            # 4 blocks reserved
+        assert a.allocated_blocks == 0     # nothing physical yet
+        a.ensure(0, 8)
+        assert a.allocated_blocks == 1
+        a.ensure(0, 9)                     # crosses a block boundary
+        assert a.allocated_blocks == 2
+        a.ensure(0, 9)                     # idempotent
+        assert a.allocated_blocks == 2
+        assert a.peak_blocks == 2
+
+    def test_release_returns_blocks_and_reservation(self):
+        a = BlockAllocator(num_blocks=4, block_size=8, slots=2, table_len=4)
+        assert a.reserve(0, 32)            # whole pool
+        a.ensure(0, 17)                    # 3 blocks physical
+        assert not a.reserve(1, 8)
+        assert a.release(0) == 3
+        assert a.free_blocks == 4
+        assert a.reserve(1, 32)
+
+    def test_table_rows_use_sentinel_for_unallocated(self):
+        a = BlockAllocator(num_blocks=4, block_size=8, slots=2, table_len=4)
+        assert (a.tables == 4).all()
+        a.reserve(0, 24)
+        a.ensure(0, 10)                    # 2 blocks
+        assert (a.tables[0, :2] < 4).all() and (a.tables[0, 2:] == 4).all()
+        a.release(0)
+        assert (a.tables == 4).all()
+
+    def test_ensure_beyond_reservation_is_an_accounting_bug(self):
+        a = BlockAllocator(num_blocks=4, block_size=8, slots=1, table_len=4)
+        a.reserve(0, 8)                    # 1 block
+        with pytest.raises(RuntimeError, match="reservation"):
+            a.ensure(0, 16)
+
+
+class TestPagedEngineLifecycle:
+    def _engine(self, params, cfg, **kw):
+        kw.setdefault("slots", 4)
+        kw.setdefault("cache_len", 64)
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("block_size", 16)
+        return ServeEngine(cfg, params, **kw)
+
+    def test_pool_exhaustion_queues_requests(self, rng):
+        """More submitted work than the pool holds at once: later requests
+        wait for freed blocks instead of crashing, and everything drains."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        # pool of 2 blocks = 32 tokens; each request needs 2 blocks
+        eng = self._engine(params, cfg, num_blocks=2, max_seq_len=32)
+        reqs = [_req(i, 12, max_new_tokens=6) for i in range(4)]
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        assert all(len(r.generated) == 6 for r in reqs)
+        assert stats["max_residents"] == 1      # pool admits one at a time
+        assert stats["requests_finished"] == 4
+
+    def test_blocks_freed_on_harvest(self, rng):
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = self._engine(params, cfg)
+        for i in range(6):
+            eng.submit(_req(i, 8 + i, max_new_tokens=4))
+        eng.run_until_drained()
+        assert eng.alloc.allocated_blocks == 0
+        assert eng.alloc.free_blocks == eng.num_blocks
+        assert (eng.alloc.tables == eng.num_blocks).all()
+
+    def test_lazy_decode_allocation_tracks_residency(self, rng):
+        """A request that EOSes early never touches its tail blocks: peak
+        pool usage stays below the worst-case reservation."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = self._engine(params, cfg, block_size=4, num_blocks=32)
+        r = _req(0, 5, max_new_tokens=40)       # reserves ceil(44/4) = 11
+        eng.submit(r)
+        eng.step()                              # prefill + first chunk
+        assert eng.alloc.allocated_blocks < 11  # only residency so far
+        eng.run_until_drained()
+        assert len(r.generated) == 40
+
+    def test_eos_mid_chunk_then_block_reuse_matches_dense(self, rng):
+        """The paged-only hazard path: a slot that EOSes mid-chunk keeps
+        committing through its still-live table until harvest, and its
+        freed blocks are then reused by a queued request. If post-EOS
+        commits ever leaked into reallocated blocks, the follow-up
+        request's tokens would diverge from the dense engine's."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+
+        def run(paged, eos_id):
+            kw = dict(kv_layout="paged", block_size=16,
+                      max_seq_len=64) if paged else {}
+            eng = ServeEngine(cfg, params, slots=2, cache_len=64,
+                              decode_block=4, **kw)
+            stoch = _req(0, 8, max_new_tokens=12, eos_id=eos_id)
+            stoch.temperature, stoch.seed = 1.0, 11
+            runner = _req(1, 6, max_new_tokens=8)
+            follow = _req(2, 10, max_new_tokens=6)   # reuses freed blocks
+            for r in (stoch, runner, follow):
+                eng.submit(r)
+            eng.run_until_drained()
+            return [stoch.generated, runner.generated, follow.generated]
+
+        free_run = run(True, -1)[0]
+        assert len(free_run) == 12
+        first_seen = {}
+        for i, t in enumerate(free_run):
+            first_seen.setdefault(t, i)
+        # latest first occurrence that is strictly mid-stream, so the slot
+        # stops with decode steps still left in its chunk
+        mid = [(t, i) for t, i in first_seen.items()
+               if 0 < i < len(free_run) - 1]
+        if not mid:
+            pytest.skip("degenerate stream: no mid-stream token to use")
+        eos, stop_i = max(mid, key=lambda kv: kv[1])
+        dense, paged = run(False, eos), run(True, eos)
+        assert paged[0][-1] == eos and len(paged[0]) == stop_i + 1
+        assert dense == paged
+
+    def test_submit_rejects_never_admittable_with_block_count(self, rng):
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = self._engine(params, cfg, num_blocks=2, max_seq_len=256)
+        with pytest.raises(ValueError, match=r"needs 4 cache blocks"):
+            eng.submit(_req(0, 50, max_new_tokens=8))   # 57 tokens, 4 blocks
+        with pytest.raises(ValueError, match=r"needs 263 cache tokens"):
+            eng.submit(_req(1, 200, max_new_tokens=64, ))
+
+    @pytest.mark.slow
+    def test_fragmentation_stress_interleaved_lengths(self, rng):
+        """Interleaved short/long requests churning an over-subscribed pool:
+        blocks recycle across waves with no leak and every request gets its
+        exact token budget."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = self._engine(params, cfg, slots=6, block_size=8,
+                           num_blocks=24, max_seq_len=96, prefill_chunk=32)
+        rr = np.random.default_rng(7)
+        reqs = []
+        for i in range(24):
+            plen = int(rr.integers(3, 40)) if i % 2 else int(
+                rr.integers(40, 80))
+            budget = int(rr.integers(2, 12))
+            reqs.append(_req(i, min(plen, 96 - budget), max_new_tokens=budget))
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run_until_drained(max_steps=50_000)
+        assert all(r.done for r in reqs)
+        assert [len(r.generated) for r in reqs] == \
+            [r.max_new_tokens for r in reqs]
+        assert eng.alloc.allocated_blocks == 0
+        assert eng.alloc.free_blocks == eng.num_blocks
+        assert stats["requests_finished"] == len(reqs)
+        # fragmentation win: more than one wave was resident at peak
+        assert stats["max_residents"] > 1
+
+
+class TestPagedKernelParity:
+    def _rand_pool(self, rng, NB, Hkv, bs, D):
+        ks = jax.random.split(rng, 4)
+        k = jax.random.randint(ks[0], (NB, Hkv, bs, D), -127, 128, jnp.int32)
+        v = jax.random.randint(ks[1], (NB, Hkv, bs, D), -127, 128, jnp.int32)
+        sk = jax.random.uniform(ks[2], (NB, Hkv, bs), jnp.float32, 0.01, 0.2)
+        sv = jax.random.uniform(ks[3], (NB, Hkv, bs), jnp.float32, 0.01, 0.2)
+        return k.astype(jnp.int8), v.astype(jnp.int8), sk, sv
+
+    def test_block_table_kernel_matches_ref(self, rng):
+        B, H, Hkv, D, bs, NB, T = 3, 4, 2, 16, 8, 10, 4
+        kp, vp, sk, sv = self._rand_pool(rng, NB, Hkv, bs, D)
+        q = jax.random.normal(jax.random.fold_in(rng, 1), (B, H, D),
+                              jnp.float32)
+        # distinct non-contiguous blocks per row; row 2 has sentinel tails
+        tbl = jnp.asarray([[7, 2, 9, 0], [1, 4, 6, 8], [3, 5, NB, NB]],
+                          jnp.int32)
+        lengths = jnp.asarray([4 * bs, 3 * bs - 3, bs + 2], jnp.int32)
+        out = kvq_paged_decode_attn(q, kp, vp, sk, sv, tbl, lengths)
+        ref = kvq_paged_decode_attn_ref(q, kp, vp, sk, sv, tbl, lengths)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_gather_matches_manual_indexing(self, rng):
+        NB, Hkv, bs, D = 6, 2, 4, 8
+        kp, _, sk, _ = self._rand_pool(rng, NB, Hkv, bs, D)
+        tbl = jnp.asarray([[5, 1, 3]], jnp.int32)
+        g = gather_paged_kv(kp, tbl)
+        assert g.shape == (1, Hkv, 3 * bs, D)
+        np.testing.assert_array_equal(np.asarray(g[0, :, :bs]),
+                                      np.asarray(kp[5]))
+        np.testing.assert_array_equal(np.asarray(g[0, :, bs:2 * bs]),
+                                      np.asarray(kp[1]))
+        gs = gather_paged_kv(sk, tbl)
+        assert gs.shape == (1, Hkv, 3 * bs)
+        np.testing.assert_array_equal(np.asarray(gs[0, :, 2 * bs:]),
+                                      np.asarray(sk[3]))
+
+    def test_sentinel_blocks_do_not_leak_into_output(self, rng):
+        """Positions past ``lengths`` (sentinel or stale blocks) must not
+        change the result: scribbling on every block the slot does NOT own
+        leaves its output bit-identical."""
+        B, H, Hkv, D, bs, NB = 1, 2, 1, 8, 4, 6
+        kp, vp, sk, sv = self._rand_pool(rng, NB, Hkv, bs, D)
+        tbl = jnp.asarray([[2, 4, NB, NB]], jnp.int32)
+        lengths = jnp.asarray([bs + 1], jnp.int32)
+        q = jax.random.normal(jax.random.fold_in(rng, 2), (B, H, D),
+                              jnp.float32)
+        out = kvq_paged_decode_attn(q, kp, vp, sk, sv, tbl, lengths)
+        owned = {2, 4}
+        scrib = jnp.asarray(
+            np.where(np.isin(np.arange(NB), list(owned))[:, None, None,
+                                                         None],
+                     np.asarray(kp), 77).astype(np.int8))
+        out2 = kvq_paged_decode_attn(q, scrib, vp, sk, sv, tbl, lengths)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))

@@ -222,8 +222,11 @@ class TestEngineV2:
         eng = ServeEngine(cfg, params, slots=1, cache_len=64, max_new_cap=16)
         with pytest.raises(ValueError, match="max_new_cap"):
             eng.submit(_req(0, 4, max_new_tokens=17))
-        with pytest.raises(ValueError, match="cache_len"):
-            eng.submit(_req(1, 60, max_new_tokens=8))   # 60 + 8 > 64
+        # the message must report the computed requirement (60 + 8 - 1 = 67)
+        # alongside the limit, not just restate the inputs
+        with pytest.raises(ValueError,
+                           match=r"needs 67 cache tokens.*cache_len=64"):
+            eng.submit(_req(1, 60, max_new_tokens=8))   # 60 + 8 - 1 > 64
 
     def test_duplicate_uid_requests_do_not_break_selection(self, rng):
         """Request equality is identity (ndarray prompts break value eq):
@@ -249,6 +252,22 @@ class TestEngineV2:
         assert len(r.generated) == 9                   # 1 prefill + 8 decode
         assert stats["tokens_out"] == 9
 
+    def test_auto_decode_block_probe_picks_a_candidate(self, rng):
+        """decode_block="auto" runs the construction-time latency probe;
+        an int stays the config override."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = ServeEngine(cfg, params, slots=2, cache_len=64,
+                          decode_block="auto")
+        assert eng.decode_block in (4, 8, 16, 32)
+        r = _req(0, 6, max_new_tokens=5)
+        eng.submit(r)
+        eng.run_until_drained()
+        assert r.done and len(r.generated) == 5
+        over = ServeEngine(cfg, params, slots=2, cache_len=64,
+                           decode_block=4)
+        assert over.decode_block == 4
+
     def test_temperature_sampling_is_seeded_and_in_vocab(self, rng):
         cfg = get_reduced_config("qwen2.5-3b")
         params = init_params(cfg, rng)
@@ -264,3 +283,114 @@ class TestEngineV2:
         a, b = run(7), run(7)
         assert a == b                       # deterministic per seed
         assert all(0 <= t < cfg.vocab_size for t in a)
+
+
+class TestPagedEngine:
+    """Paged (block-table) KV cache engine vs the dense engine."""
+
+    def _mixed_reqs(self):
+        reqs = []
+        for i, (plen, temp) in enumerate(
+                [(5, 0.0), (12, 0.9), (8, 0.0), (3, 1.2)]):
+            r = _req(i, plen, max_new_tokens=6)
+            r.temperature, r.top_k, r.seed = temp, 8 if temp else 0, i
+            reqs.append(r)
+        return reqs
+
+    def test_paged_matches_dense_tokens_mixed_length_batch(self, rng):
+        """Identical generated tokens on a mixed-length batch (greedy and
+        seeded-stochastic rows): the paged layout only changes where cache
+        bytes live, never what attention computes."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        dense = ServeEngine(cfg, params, slots=4, cache_len=64)
+        rd = self._mixed_reqs()
+        for r in rd:
+            dense.submit(r)
+        dense.run_until_drained()
+        paged = ServeEngine(cfg, params, slots=4, cache_len=64,
+                            kv_layout="paged", block_size=16,
+                            max_seq_len=64)
+        rp = self._mixed_reqs()
+        for r in rp:
+            paged.submit(r)
+        paged.run_until_drained()
+        assert all(r.done for r in rd + rp)
+        assert [a.generated for a in rd] == [b.generated for b in rp]
+
+    def test_chunked_prefill_admits_prompts_beyond_one_bucket(self, rng):
+        """A prompt longer than ``prefill_chunk`` (and longer than any
+        dense per-slot stripe would allow) is admitted as fixed-size
+        chunks appending blocks incrementally — the cache_len prompt bound
+        is gone in paged mode."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = ServeEngine(cfg, params, slots=2, cache_len=32,
+                          kv_layout="paged", block_size=16, num_blocks=8,
+                          max_seq_len=128, prefill_chunk=16)
+        long_req = _req(0, 50, max_new_tokens=5)    # dense would reject
+        short = _req(1, 6, max_new_tokens=4)
+        eng.submit(long_req)
+        eng.submit(short)
+        stats = eng.run_until_drained()
+        assert long_req.done and len(long_req.generated) == 5
+        assert short.done and len(short.generated) == 4
+        assert stats["prefill_chunks"] == 4         # ceil(50 / 16)
+
+    def test_chunked_prefill_interleaves_with_decode(self, rng):
+        """One prefill chunk per engine step: a co-resident short request
+        keeps decoding while a long prompt is still prefilling, so the
+        short one finishes before the long one even produces its first
+        token."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = ServeEngine(cfg, params, slots=2, cache_len=64,
+                          kv_layout="paged", block_size=16, num_blocks=16,
+                          max_seq_len=128, prefill_chunk=16,
+                          decode_block=2)
+        short = _req(0, 4, max_new_tokens=4)
+        long_req = _req(1, 64, max_new_tokens=4)    # 4 chunks of 16
+        eng.submit(short)
+        eng.submit(long_req)
+        eng.run_until_drained()
+        assert short.done and long_req.done
+        assert len(short.generated) == 4 and len(long_req.generated) == 4
+        # the short request drained while the long prompt was chunking
+        assert short._timing.finish_t < long_req._timing.admit_t
+
+    def test_chunked_prefill_matches_one_shot_greedy(self, rng):
+        """Greedy decode after a chunked prefill agrees with the one-shot
+        batched prefill of the same prompt (history is re-read quantized,
+        which is exactly what decode reads too)."""
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        prompt = (np.arange(50) * 3 % 250).astype(np.int32)
+
+        def run(chunk):
+            eng = ServeEngine(cfg, params, slots=1, cache_len=64,
+                              kv_layout="paged", block_size=16,
+                              num_blocks=8, max_seq_len=128,
+                              prefill_chunk=chunk)
+            r = Request(uid=0, prompt=prompt, max_new_tokens=6)
+            eng.submit(r)
+            eng.run_until_drained()
+            return r.generated
+
+        assert run(64) == run(16)           # one-shot vs 4 chunks
+
+    def test_paged_requires_full_attention_decoder(self, rng):
+        cfg = get_reduced_config("xlstm-125m")
+        params = init_params(cfg, rng)
+        with pytest.raises(ValueError, match="full-attention"):
+            ServeEngine(cfg, params, slots=2, cache_len=32,
+                        kv_layout="paged")
+
+    def test_paged_submit_reports_computed_tokens(self, rng):
+        cfg = get_reduced_config("qwen2.5-3b")
+        params = init_params(cfg, rng)
+        eng = ServeEngine(cfg, params, slots=2, cache_len=32,
+                          kv_layout="paged", block_size=16,
+                          max_seq_len=64)
+        with pytest.raises(ValueError,
+                           match=r"needs 79 cache tokens.*max_seq_len=64"):
+            eng.submit(_req(0, 72, max_new_tokens=8))   # 72 + 8 - 1 = 79
