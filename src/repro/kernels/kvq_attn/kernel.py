@@ -153,6 +153,40 @@ def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
     )(block_tbl, lengths, q, k_pool, v_pool, s_k, s_v)
 
 
+def _copy_kernel(src_ref, dst_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def pool_block_copy(x, src, dst, interpret: bool = True):
+    """In-place pool-block copy: ``x[:, dst[i]] <- x[:, src[i]]``.
+
+    The copy-on-write primitive of the prefix-shared paged cache: when a
+    slot must write into a block another slot still maps, the engine clones
+    the int8 payload (+ scales) device-side and repoints the writer's table
+    entry at the clone. ``x`` (rep, NB, X) is the layer-stacked pool with
+    the per-block payload flattened to the lane dim; the pool is aliased
+    into the output so only the ``dst`` blocks are rewritten — one block
+    DMA per (layer, pair) grid step, no full-pool traffic. Pairs with
+    ``src == dst`` are self-copy no-ops (the padding convention ops.py uses
+    to bound compile variants).
+    """
+    rep, _nb, X = x.shape
+    n = src.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # src ids, dst ids
+        grid=(rep, n),
+        in_specs=[pl.BlockSpec((1, 1, X), lambda r, i, s, d: (r, s[i], 0))],
+        out_specs=pl.BlockSpec((1, 1, X), lambda r, i, s, d: (r, d[i], 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={2: 0},                 # pool is updated in place
+        interpret=interpret,
+    )(src, dst, x)
+
+
 def kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths,
                     interpret: bool = True):
     """See ref.py for shapes; S must be a multiple of BS (ops.py pads)."""

@@ -1,14 +1,46 @@
 """jit'd wrapper for the quantized-KV flash-decode kernel."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.kvq_attn import kernel as K
-from repro.kernels.kvq_attn.ref import (kvq_decode_attn_ref,
+from repro.kernels.kvq_attn.ref import (copy_pool_blocks_ref,
+                                        kvq_decode_attn_ref,
                                         kvq_paged_decode_attn_ref)
 
 _INTERPRET = jax.default_backend() != "tpu"
+
+
+def copy_pool_blocks(pool, src, dst,
+                     use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Device-side copy-on-write block clone over a layer-stacked pool leaf.
+
+    pool (rep, NB, ...) int8 payload or fp32 scales; src/dst (n,) int32
+    block-id pairs. ``dst`` entries >= NB are padding (the engine buckets
+    the pair count to a power of two to bound compile variants) and are
+    dropped. On TPU the Pallas kernel rewrites only the ``dst`` blocks via
+    an aliased in-place pallas_call; elsewhere the XLA scatter reference
+    runs (bitwise-identical result).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return copy_pool_blocks_ref(pool, src, dst)
+    nb = pool.shape[1]
+    pad = dst >= nb
+    # padding convention for the kernel: src == dst is a self-copy no-op.
+    # Pads self-copy the first *source* block — a src is never a dst in
+    # the same call, so no pad step can race a real pair's output DMA
+    # (self-copying a dst block could prefetch its stale payload and
+    # write it back after the real copy landed).
+    srcp = jnp.where(pad, src[0], src).astype(jnp.int32)
+    dstp = jnp.where(pad, src[0], dst).astype(jnp.int32)
+    flat = pool.reshape(pool.shape[0], nb, -1)
+    out = K.pool_block_copy(flat, srcp, dstp, interpret=_INTERPRET)
+    return out.reshape(pool.shape)
 
 
 def kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths,

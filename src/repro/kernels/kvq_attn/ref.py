@@ -51,6 +51,20 @@ def gather_paged_kv(pool: jnp.ndarray, block_tbl: jnp.ndarray) -> jnp.ndarray:
     return g.reshape(g.shape[:2] + (g.shape[2] * g.shape[3],) + g.shape[4:])
 
 
+def copy_pool_blocks_ref(pool: jnp.ndarray, src: jnp.ndarray,
+                         dst: jnp.ndarray) -> jnp.ndarray:
+    """XLA oracle for the copy-on-write block clone.
+
+    pool: (rep, NB, ...) layer-stacked pool leaf (K/V payload or scales).
+    src/dst: (n,) int32 block-id pairs; ``dst`` entries >= NB are padding
+    and dropped (``src`` is clamped so the padded gather stays in range).
+    Returns the pool with ``pool[:, dst[i]] = pool[:, src[i]]`` applied.
+    """
+    nb = pool.shape[1]
+    return pool.at[:, dst].set(pool[:, jnp.minimum(src, nb - 1)],
+                               mode="drop")
+
+
 def kvq_paged_decode_attn_ref(q, k_pool, v_pool, s_k, s_v, block_tbl,
                               lengths):
     """Block-table decode attention oracle: gather, then dense ref.

@@ -62,6 +62,19 @@ def main():
     ap.add_argument("--max-seq-len", type=int, default=0,
                     help="per-request token cap / block-table width "
                          "(paged; 0 = match the dense cache_len)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix sharing (paged; on by default: "
+                         "prompts extending a cached prefix map the same "
+                         "pool blocks and prefill only their tail)")
+    ap.add_argument("--admission", default="reserve",
+                    choices=("reserve", "optimistic"),
+                    help="paged admission: reserve worst-case blocks up "
+                         "front, or admit on prompt footprint and preempt "
+                         "(swap out) a resident when the pool runs dry")
+    ap.add_argument("--preempt", default="last_admitted",
+                    choices=("last_admitted", "longest_remaining"),
+                    help="victim policy for optimistic-admission "
+                         "preemption")
     ap.add_argument("--sched", default="fcfs", choices=("fcfs", "sjf"))
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -77,7 +90,9 @@ def main():
     if args.kv_layout == "paged":
         kw = {"kv_layout": "paged", "block_size": args.block_size,
               "num_blocks": args.num_blocks or None,
-              "max_seq_len": args.max_seq_len or None}
+              "max_seq_len": args.max_seq_len or None,
+              "prefix_cache": not args.no_prefix_cache,
+              "admission": args.admission, "preempt": args.preempt}
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
                          cache_len=args.cache_len,
                          decode_block=decode_block,
@@ -96,6 +111,13 @@ def main():
           f"({stats['decode_step_s'] * 1e3:.1f} ms/step), "
           f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.0f} ms "
           f"p95 {stats['ttft_p95_s'] * 1e3:.0f} ms")
+    if args.kv_layout == "paged":
+        print(f"prefix cache: {stats['prefix_hit_tokens']} hit tokens / "
+              f"{stats['prompt_tokens_prefilled']} prefilled, "
+              f"{stats['cow_copies']} COW copies; preemption: "
+              f"{stats['preemptions']} swaps, "
+              f"{stats['swap_out_bytes'] + stats['swap_in_bytes']} bytes "
+              f"moved in {stats['swap_s'] * 1e3:.0f} ms")
     if args.bench_out:
         with open(args.bench_out, "w") as f:
             json.dump({"args": vars(args), "stats": stats}, f, indent=2)

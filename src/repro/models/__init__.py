@@ -1,7 +1,7 @@
 """Pure-JAX functional model zoo with SiLQ quantization sites."""
 from repro.models.model import (decode_step, forward, head_logits, init_cache,
-                                init_params, prefill, prefill_chunk,
+                                init_params, prefill, prefill_tail,
                                 segment_plan)
 
 __all__ = ["decode_step", "forward", "head_logits", "init_cache",
-           "init_params", "prefill", "prefill_chunk", "segment_plan"]
+           "init_params", "prefill", "prefill_tail", "segment_plan"]

@@ -481,20 +481,31 @@ def attn_chunk_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict,
                        x: jnp.ndarray, rope, cache: Dict,
                        tbl_row: jnp.ndarray, slot: jnp.ndarray,
                        offset: jnp.ndarray, chunk_len: jnp.ndarray):
-    """One fixed-size chunk of an incremental (chunked) prefill, one slot.
+    """One fixed-size window of an incremental (chunked / tail) prefill,
+    one slot.
 
-    x (1, C, d): chunk of the prompt whose first token sits at absolute
+    x (1, C, d): window of the prompt whose first token sits at absolute
     position ``offset``; only the first ``chunk_len`` rows are real (the
-    final chunk is right-padded). Queries attend to the ``offset`` tokens
+    final window is right-padded). Queries attend to the ``offset`` tokens
     already committed to the pool (gathered through ``tbl_row`` and
-    dequantized tile-by-tile at read, like decode) plus the chunk itself
-    (causal, exact bf16 K/V). The chunk's K/V are quantized and scattered
-    through the table, appending blocks the allocator grew for this chunk.
+    dequantized tile-by-tile at read, like decode) plus the window itself
+    (causal, exact bf16 K/V). The window's K/V are quantized and scattered
+    through the table, appending blocks the allocator grew for this window.
 
-    Note: history keys are read back *quantized*, so a chunked prefill is
-    numerically the serving-cache path, not bit-identical to a one-shot
-    prefill — same contract as any PagedAttention-style chunked prefill
-    over a quantized cache.
+    Prefix sharing rides on this contract unchanged: for a prefix-hit
+    admission ``offset`` is the cached-token count, so the "history" is
+    another request's blocks mapped into ``tbl_row`` (refcounted by the
+    allocator) — including a shared *split block* the offset may point
+    into mid-block. The engine resolves copy-on-write for every shared
+    block in the write range [offset, offset + chunk_len) before calling,
+    so the scatter below only ever lands in blocks this slot exclusively
+    owns; the history mask (``kpos < offset``) keeps reads inside the
+    shared extent.
+
+    Note: history keys are read back *quantized*, so a chunked/tail
+    prefill is numerically the serving-cache path, not bit-identical to a
+    one-shot prefill — same contract as any PagedAttention-style chunked
+    prefill over a quantized cache.
     """
     from repro.kernels.kvq_attn.ref import gather_paged_kv
     B, C, _ = x.shape                                 # B == 1

@@ -422,31 +422,43 @@ def decode_step(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
     return logits, new_cache
 
 
-def prefill_chunk(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
-                  tokens: jnp.ndarray, cache: Dict, slot: jnp.ndarray,
-                  offset: jnp.ndarray, chunk_len: jnp.ndarray,
-                  hist_blocks: int = 0):
-    """One chunk of an incremental (chunked) prefill for a single slot.
+def prefill_tail(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
+                 tokens: jnp.ndarray, cache: Dict, slot: jnp.ndarray,
+                 start: jnp.ndarray, n_tokens: jnp.ndarray,
+                 hist_blocks: int = 0):
+    """Partial prefill from token offset ``start`` for a single slot.
 
-    ``tokens`` (1, C) int32 is a fixed-size window of the prompt starting at
-    absolute position ``offset``; only the first ``chunk_len`` tokens are
-    real (the last chunk is right-padded, so every chunk compiles to the
-    same program). K/V blocks are committed through
-    ``cache["block_tbl"][slot]`` — the engine grows that slot's table to
-    cover ``offset + chunk_len`` tokens before calling. ``hist_blocks``
-    (trace-time constant > 0) truncates the table walk to the slot's first
-    ``hist_blocks`` entries so the history gather scales with the prompt,
-    not ``max_seq_len`` — it must cover ``offset + chunk_len`` tokens (the
-    engine buckets it to a power of two to bound compile variants).
-    Requires the paged attention-only cache (see ``init_cache`` with
-    ``num_blocks``).
+    The entry point behind both *prefix-shared admission* (the first
+    ``start`` tokens were found in the prefix cache and their pool blocks
+    are already mapped into ``cache["block_tbl"][slot]`` — only the
+    uncached tail is computed) and *chunked prefill* (one fixed-size window
+    of a long prompt per call). ``tokens`` (1, C) int32 is the window whose
+    first token sits at absolute position ``start``; only the first
+    ``n_tokens`` are real (the window is right-padded so every call
+    compiles to the same program).
 
-    Returns (logits (1, V) at the chunk's last real token, new cache) —
-    only the final chunk's logits are meaningful (they feed the first
+    Queries attend over the ``start`` tokens already resident in the pool —
+    gathered through the slot's table and dequantized at read, exactly what
+    decode reads (``blocks.attn_chunk_prefill``) — plus the window itself
+    (causal, exact bf16). The window's K/V are quantized and committed
+    through the table; the engine must have grown the table to cover
+    ``start + n_tokens`` tokens and resolved copy-on-write for any shared
+    block in that write range *before* calling.
+
+    ``hist_blocks`` (trace-time constant > 0) truncates the table walk to
+    the slot's first ``hist_blocks`` entries so the history gather scales
+    with the prompt, not ``max_seq_len`` — it must cover ``start +
+    n_tokens`` tokens (the engine buckets it to a power of two to bound
+    compile variants). Requires the paged attention-only cache (see
+    ``init_cache`` with ``num_blocks``).
+
+    Returns (logits (1, V) at the window's last real token, new cache) —
+    meaningful on the final window of a prompt (they feed the first
     sampled token).
     """
+    offset, chunk_len = start, n_tokens
     if "block_tbl" not in cache:
-        raise ValueError("prefill_chunk requires a paged cache "
+        raise ValueError("prefill_tail requires a paged cache "
                          "(init_cache(..., num_blocks=...))")
     C = tokens.shape[1]
     positions = offset + jnp.arange(C)

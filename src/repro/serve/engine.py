@@ -17,16 +17,35 @@ admission boundaries:
 * **Paged KV cache** (``kv_layout="paged"``) — instead of reserving a dense
   ``cache_len`` stripe per slot, attention layers share one global pool of
   fixed-size quantized blocks addressed through a per-slot block table
-  (``serve.block_alloc`` owns the free list on the host). Admission switches
-  from "fits in cache_len" to "enough free blocks", blocks are allocated
-  lazily as decode crosses block boundaries, and harvest returns them to the
-  pool — so capacity tracks actual token residency, not the worst-case
-  request. Prompts longer than ``prefill_chunk`` are admitted as a sequence
-  of fixed-size **chunked prefill** calls that append blocks incrementally
-  (``models.prefill_chunk``), removing the cache_len bound on prompt length.
+  (``serve.block_alloc`` owns the refcounted pool on the host). Admission
+  switches from "fits in cache_len" to "enough free blocks", blocks are
+  allocated lazily as decode crosses block boundaries, and harvest returns
+  them to the pool — so capacity tracks actual token residency, not the
+  worst-case request. Prompts longer than ``prefill_chunk`` are admitted as
+  a sequence of fixed-size **chunked prefill** calls that append blocks
+  incrementally (``models.prefill_tail``), removing the cache_len bound on
+  prompt length.
+* **Prefix sharing** (``prefix_cache=True``, paged only) — full blocks of
+  written tokens are content-addressed in the allocator's rolling-hash
+  index; a request whose prompt extends a cached prefix maps those pool
+  blocks into its table (refcount++) and prefills **only the uncached
+  tail** (``models.prefill_tail`` starting at the cached offset). The
+  *split block* — the partial block where two prompts diverge — is shared
+  too and cloned device-side on first write (copy-on-write,
+  ``kernels.kvq_attn.ops.copy_pool_blocks``). Shared-prompt workloads
+  (system-prompted chat, few-shot eval, best-of-n) drop from O(prompt) to
+  O(tail) prefill per request.
+* **Preemption / swap-out** (``admission="optimistic"``) — instead of
+  debiting a request's worst-case block count at admission, only its
+  prompt footprint is allocated; when the pool later runs dry the engine
+  picks a victim (``preempt="last_admitted"`` or ``"longest_remaining"``),
+  swaps its quantized blocks to a host buffer (int8 payloads move 4x
+  cheaper than fp32), requeues it, and restores it bit-exactly once the
+  pool recovers — decode resumes mid-stream with identical tokens.
 * **Scheduler** (``serve.scheduler``) — pluggable FCFS / shortest-prompt
   policies plus per-request TTFT/latency accounting; paged admission uses
-  its head-of-line ``admit_ok`` hook so big requests aren't starved.
+  its head-of-line ``admit_ok`` hook so big requests aren't starved, and
+  its ``pick_victim`` hook chooses preemption victims.
 
 All per-slot cache state (int8 KV / recurrent) stays in one pytree so the
 decode chunk is a single compiled program regardless of slot occupancy;
@@ -46,13 +65,27 @@ import numpy as np
 
 from repro.configs.base import ATTENTION_BLOCKS, BLOCK_ATTN, ModelConfig
 from repro.core.qat import make_ctx
-from repro.models import decode_step, init_cache, prefill
-from repro.models import prefill_chunk as model_prefill_chunk
-from repro.serve.block_alloc import BlockAllocator
+from repro.kernels.kvq_attn.ops import copy_pool_blocks
+from repro.models import decode_step, init_cache, prefill, prefill_tail
+from repro.serve.block_alloc import BlockAllocator, PoolDry
 from repro.serve.sampling import TOP_K_CAP, fold_step, sample_tokens
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import PREEMPT_POLICIES, Scheduler
 
 _POOL_KEYS = ("k_q", "v_q", "s_k", "s_v")   # pool-shaped paged cache leaves
+
+
+def _pow2_ceil(n: int) -> int:
+    """Smallest power of two >= max(n, 1) — used to bucket dynamic batch
+    dimensions so compile variants stay logarithmic."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# decode_block="auto" probe results, memoized per process so benchmark
+# scripts constructing several engines don't re-pay the probe compiles
+_PROBE_CACHE: Dict[tuple, int] = {}
 
 
 @dataclass(eq=False)                    # identity equality: the ndarray
@@ -78,7 +111,11 @@ class ServeEngine:
                  kv_layout: str = "dense", block_size: int = 64,
                  num_blocks: Optional[int] = None,
                  max_seq_len: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 table_len: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 admission: str = "reserve",
+                 preempt: str = "last_admitted"):
         self.cfg = cfg
         self.params = params
         self.ctx = make_ctx(policy)
@@ -119,13 +156,28 @@ class ServeEngine:
             # work of the dense layout
             self.max_seq_len = max_seq_len or min(
                 cache_len, self.num_blocks * block_size)
-            self.table_len = -(-self.max_seq_len // block_size)
+            self.table_len = table_len or -(-self.max_seq_len // block_size)
             self.prefill_chunk = prefill_chunk or 4 * prefill_bucket
+            if admission not in ("reserve", "optimistic"):
+                raise ValueError(f"admission must be 'reserve' or "
+                                 f"'optimistic', got {admission!r}")
+            if preempt not in PREEMPT_POLICIES:
+                raise ValueError(f"preempt must be one of "
+                                 f"{PREEMPT_POLICIES}, got {preempt!r}")
+        self.prefix_cache = prefix_cache and self._paged
+        self.admission = admission
+        self.preempt = preempt
         auto_block = decode_block == "auto"
         self.decode_block = 8 if auto_block else int(decode_block)
         self.reset()
         if auto_block:
-            self.decode_block = self._probe_decode_block()
+            probe_key = (cfg.name, policy, slots, kv_layout, cache_len,
+                         max_new_cap, block_size if self._paged else 0,
+                         self.num_blocks if self._paged else 0,
+                         self.table_len if self._paged else 0)
+            if probe_key not in _PROBE_CACHE:
+                _PROBE_CACHE[probe_key] = self._probe_decode_block()
+            self.decode_block = _PROBE_CACHE[probe_key]
         # greedy_only is a trace-time constant: two compiled variants at
         # most. The state pytree is donated so the slot caches are updated
         # in place (no 2x cache copy per chunk; a no-op on backends
@@ -140,10 +192,20 @@ class ServeEngine:
                 donate_argnums=(1,))
             self._chunk_jit = jax.jit(
                 lambda params, cache, toks, slot, off, clen, hb:
-                model_prefill_chunk(self.cfg, params, self.ctx, toks,
-                                    cache, slot, off, clen,
-                                    hist_blocks=hb),
+                prefill_tail(self.cfg, params, self.ctx, toks,
+                             cache, slot, off, clen, hist_blocks=hb),
                 static_argnums=(6,), donate_argnums=(1,))
+
+            def cow_copy(cache, src, dst):
+                def cp(path, leaf):
+                    if getattr(path[-1], "key", None) in _POOL_KEYS:
+                        return copy_pool_blocks(leaf, src, dst)
+                    return leaf
+                return jax.tree_util.tree_map_with_path(cp, cache)
+
+            # donated so the COW clone rewrites pool blocks in place
+            # instead of materializing a second pool
+            self._cow_jit = jax.jit(cow_copy, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     # Compiled programs
@@ -295,17 +357,28 @@ class ServeEngine:
     def reset(self) -> None:
         """Clear all serving state but keep compiled programs warm."""
         self.state = self._blank_state()
+        # monotone epoch invalidates per-request lookup memos across
+        # resets (an id()-based token could collide on address reuse)
+        self._alloc_epoch = getattr(self, "_alloc_epoch", -1) + 1
         self.alloc = (BlockAllocator(self.num_blocks, self.block_size,
-                                     self.slots, self.table_len)
+                                     self.slots, self.table_len,
+                                     prefix_cache=self.prefix_cache)
                       if self._paged else None)
         self._slot_req = {}
         self._written: Dict[int, int] = {}   # paged: tokens committed/slot
         self._tbl_dirty = False              # host table mirror vs device
         self._chunk_job: Optional[Dict] = None   # in-progress chunked prefill
+        self._swapped: List[Dict] = []       # preempted, awaiting restore
+        self._admit_seq: Dict[int, int] = {}     # slot -> admission order
+        self._seq = 0
         self._max_residents = 0
         self.scheduler = Scheduler(self.scheduler.policy)
         self._host = {"decode_s": 0.0, "prefill_s": 0.0, "prefill_calls": 0,
-                      "prefill_tokens": 0, "prefill_chunks": 0}
+                      "prefill_tokens": 0, "prefill_chunks": 0,
+                      "prompt_tokens": 0, "prefix_hit_tokens": 0,
+                      "cow_copies": 0, "preemptions": 0,
+                      "swap_out_bytes": 0, "swap_in_bytes": 0,
+                      "swap_s": 0.0}
         self._cache_bytes = sum(
             leaf.nbytes for seg in self.state["cache"]["segments"]
             for leaf in jax.tree.leaves(seg))
@@ -331,6 +404,13 @@ class ServeEngine:
                     f"{self.max_seq_len}; raise max_seq_len or shorten "
                     f"the request")
             nb = self.alloc.blocks_for_tokens(need)
+            if nb > self.table_len:
+                raise ValueError(
+                    f"request needs {nb} block-table entries ({need} tokens "
+                    f"at block_size={self.block_size}) but the block table "
+                    f"is only table_len={self.table_len} entries wide, so "
+                    f"it can never be admitted; raise table_len or "
+                    f"max_seq_len")
             if nb > self.num_blocks:
                 raise ValueError(
                     f"request needs {nb} cache blocks ({need} tokens at "
@@ -370,33 +450,47 @@ class ServeEngine:
         return [s for s in range(self.slots) if s not in busy]
 
     def _admit_paged(self) -> None:
-        """Paged admission loop: free-block criterion with head-of-line
-        blocking; prompts longer than ``prefill_chunk`` start a chunked
-        prefill job that ``step`` advances one chunk at a time (decode for
-        resident slots keeps running between chunks)."""
+        """Paged admission loop. Swapped-out (preempted) requests restore
+        ahead of new work (head-of-line, so preemption can't starve).
+        Each new request is first looked up in the prefix cache: a request
+        with a cached prefix maps the hit blocks (refcount++) and admits
+        through the tail-prefill path, computing only the uncached tail;
+        prompts longer than ``prefill_chunk`` take the same path chunk by
+        chunk. Everything else admits as a batched wave under the
+        free-block criterion with head-of-line blocking."""
+        if self._swapped:
+            self._try_swap_in()
+            if self._swapped:
+                return              # restore before admitting new work
         while self.scheduler.pending:
             free = self._free_slots()
             if not free:
                 return
             head = self.scheduler.first()
-            need = len(head.prompt) + head.max_new_tokens - 1
-            if len(head.prompt) > self.prefill_chunk:
+            plen = len(head.prompt)
+            hit_ids, cached, partial = self._lookup(head)
+            if cached or plen > self.prefill_chunk:
                 if self._chunk_job is not None:
-                    return                  # one chunked admission at a time
-                if not self.alloc.reserve(free[0], need):
-                    return                  # pool exhausted: head waits
+                    return              # one tail/chunk admission at a time
+                slot = free[0]
+                eff = self._paged_admit_slot(slot, head, hit_ids, partial,
+                                             cached)
+                if eff is None:
+                    return              # pool exhausted: head waits
                 self.scheduler.take(head)
-                self._chunk_job = {"req": head, "slot": free[0], "c0": 0}
+                self._host["prefix_hit_tokens"] += eff
+                self._chunk_job = {"req": head, "slot": slot, "c0": eff}
                 self._note_residency()
                 continue
             taken: List[int] = []
 
             def ok(r):
                 if len(r.prompt) > self.prefill_chunk:
-                    return False            # long prompt: chunked next round
-                if not self.alloc.reserve(
-                        free[len(taken)],
-                        len(r.prompt) + r.max_new_tokens - 1):
+                    return False        # long prompt: chunked next round
+                if r is not head and self._lookup(r)[1]:
+                    return False        # cached prefix: tail path next round
+                if self._paged_admit_slot(free[len(taken)], r, (),
+                                          False, 0) is None:
                     return False
                 taken.append(free[len(taken)])
                 return True
@@ -410,16 +504,68 @@ class ServeEngine:
             self._admit_wave(reqs, taken, paged=True)
             self._note_residency()
 
+    def _lookup(self, req):
+        """Prefix-cache lookup memoized per request against the allocator
+        identity + index version, so re-walking the queue every engine
+        step doesn't re-hash prompts (or inflate the lookup stats) while
+        nothing changed — and a request resubmitted after ``reset()`` (or
+        to another engine) can't replay block ids from a dead pool."""
+        if not self.prefix_cache:
+            return (), 0, False
+        ver = (id(self), self._alloc_epoch, self.alloc.index_version)
+        memo = getattr(req, "_prefix_hit", None)
+        if memo is not None and memo[0] == ver:
+            return memo[1]
+        hit = self.alloc.lookup(req.prompt)
+        req._prefix_hit = (ver, hit)
+        return hit
+
+    def _paged_admit_slot(self, slot: int, req, hit_ids, partial: bool,
+                          cached: int) -> Optional[int]:
+        """Admit one request into ``slot``: map its shared prefix blocks
+        and commit capacity under the engine's admission discipline.
+        ``reserve`` debits the worst-case fresh-block count up front;
+        ``optimistic`` physically allocates only the first tail window
+        (the whole prompt for a wave row) and relies on preemption for
+        later growth. Returns the effective cached-token count (0 when
+        the prefix ended up unused), or None — leaving no state behind —
+        when the pool can't take the request now."""
+        plen = len(req.prompt)
+        need = plen + req.max_new_tokens - 1
+        if self.admission == "reserve":
+            if not self.alloc.reserve(slot, need, shared=hit_ids,
+                                      partial=partial):
+                # a shared admission transiently needs more obtainable
+                # blocks than an exclusive one (resurrecting LRU hits +
+                # the split-block COW can exceed the pool on tiny pools);
+                # when nothing is resident the pool will never get freer,
+                # so fall back to an unshared reservation over deadlock
+                idle = (not self._slot_req and self._chunk_job is None
+                        and not self._swapped)
+                if not (idle and hit_ids and self.alloc.reserve(slot, need)):
+                    return None
+                hit_ids, cached = (), 0
+        else:
+            self.alloc.register(slot, shared=hit_ids)
+            try:
+                self.alloc.ensure(slot, min(cached + self.prefill_chunk,
+                                            plen))
+            except PoolDry:
+                self.alloc.release(slot)
+                return None
+        if hit_ids or self.admission == "optimistic":
+            self._tbl_dirty = True
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+        return cached
+
     def _admit_wave(self, reqs, taken, paged: bool = False) -> None:
         """One batched prefill admission (dense or paged)."""
         n = len(reqs)
         # pad the admission batch up to a power of two (dummy rows scatter
         # out of range and drop) so compile variants are O(log slots) per
         # length bucket instead of one per free-slot count
-        n_pad = 1
-        while n_pad < n:
-            n_pad *= 2
-        n_pad = min(n_pad, self.slots)
+        n_pad = min(_pow2_ceil(n), self.slots)
         lens = np.ones((n_pad,), np.int32)
         lens[:n] = [len(r.prompt) for r in reqs]
         if self._pad_ok:
@@ -468,40 +614,49 @@ class ServeEngine:
         self._host["prefill_s"] += time.perf_counter() - t0
         self._host["prefill_calls"] += 1
         self._host["prefill_tokens"] += n     # first token of each request
+        self._host["prompt_tokens"] += int(sum(len(r.prompt) for r in reqs))
         self.scheduler.on_admitted(reqs)
         for s, r in zip(taken, reqs):
             self._slot_req[s] = r
             if self._paged:
                 self._written[s] = len(r.prompt)
+                # content-address the freshly written prompt blocks so
+                # later requests sharing the prefix skip their prefill
+                self.alloc.register_prefix(s, r.prompt, len(r.prompt))
 
     def _advance_chunk_job(self) -> None:
-        """Run ONE prefill chunk of the in-progress chunked admission
-        (prompts longer than ``prefill_chunk``), appending cache blocks
-        incrementally. One chunk per engine step: resident slots keep
-        decoding between chunks, so a long prompt can't freeze everyone
-        else's inter-token latency. The final chunk samples the first
-        token and arms the slot exactly like a batched admission."""
+        """Run ONE tail-prefill window of the in-progress chunked/shared
+        admission, appending cache blocks incrementally. ``c0`` starts at
+        the cached-prefix length (0 for a plain long prompt), so a
+        prefix-hit request computes only its uncached tail. One window per
+        engine step: resident slots keep decoding between windows, so a
+        long prompt can't freeze everyone else's inter-token latency. The
+        final window samples the first token and arms the slot exactly
+        like a batched admission."""
         job = self._chunk_job
         req, slot, c0 = job["req"], job["slot"], job["c0"]
         C = self.prefill_chunk
         plen = len(req.prompt)
         t0 = time.perf_counter()
         cl = min(C, plen - c0)
-        self._ensure(slot, c0 + cl)
+        if not self._ensure(slot, c0 + cl):
+            return                 # pool dry, the job itself got swapped out
+        if not self._cow_guard(slot, c0, c0 + cl):
+            return                 # ditto, while cloning the split block
         self._push_tables()
         toks = np.zeros((1, C), np.int32)
         toks[0, :cl] = req.prompt[c0:c0 + cl]
         # table walk bounded by the tokens this chunk can touch, bucketed
         # to a power of two to bound compile variants
-        hb = 1
-        while hb < self.alloc.blocks_for_tokens(c0 + C):
-            hb *= 2
+        hb = _pow2_ceil(self.alloc.blocks_for_tokens(c0 + C))
         logits, self.state["cache"] = self._chunk_jit(
             self.params, self.state["cache"], jnp.asarray(toks),
             jnp.int32(slot), jnp.int32(c0), jnp.int32(cl),
             min(hb, self.table_len))
         self._host["prefill_chunks"] += 1
-        job["c0"] = c0 + C
+        self._host["prompt_tokens"] += cl
+        job["c0"] = c0 + cl
+        self.alloc.register_prefix(slot, req.prompt, job["c0"])
         if job["c0"] < plen:                # more chunks to go
             jax.block_until_ready(self.state["cache"]["position"])
             self._host["prefill_s"] += time.perf_counter() - t0
@@ -528,9 +683,71 @@ class ServeEngine:
         self._written[slot] = plen
         self._chunk_job = None
 
-    def _ensure(self, slot: int, n_tokens: int) -> None:
-        if self.alloc.ensure(slot, n_tokens):
-            self._tbl_dirty = True
+    def _ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow the slot's block table to cover ``n_tokens``. Under
+        optimistic admission a dry pool preempts a victim — or, when no
+        other resident can be evicted, swaps out ``slot`` itself. Returns
+        False iff ``slot`` was swapped out (the caller must abandon its
+        pending work for the slot)."""
+        while True:
+            try:
+                if self.alloc.ensure(slot, n_tokens):
+                    self._tbl_dirty = True
+                return True
+            except PoolDry:
+                if not self._preempt_for(slot):
+                    self._swap_out(slot)
+                    return False
+
+    def _cow_guard(self, slot: int, start_tok: int, end_tok: int) -> bool:
+        """Resolve copy-on-write for a pending write of token positions
+        ``[start_tok, end_tok)``: shared blocks in the range are replaced
+        by fresh blocks and their int8 payload + scales cloned device-side
+        *before* the write executes. A dry pool preempts like ``_ensure``
+        (cow_range pre-checks its block need, so a raise applies nothing);
+        returns False iff ``slot`` itself was swapped out."""
+        while True:
+            try:
+                pairs = self.alloc.cow_range(slot, start_tok, end_tok)
+                break
+            except PoolDry:
+                if not self._preempt_for(slot):
+                    self._swap_out(slot)
+                    return False
+        if pairs:
+            self._apply_cow(pairs)
+        return True
+
+    def _apply_cow(self, pairs) -> None:
+        """Device-side block clones for resolved COW pairs, bucketed to a
+        power of two (pad dsts sit on the sentinel and drop)."""
+        n_pad = _pow2_ceil(len(pairs))
+        src = np.zeros((n_pad,), np.int32)
+        dst = np.full((n_pad,), self.num_blocks, np.int32)
+        src[:len(pairs)] = [p[0] for p in pairs]
+        dst[:len(pairs)] = [p[1] for p in pairs]
+        self.state["cache"] = self._cow_jit(
+            self.state["cache"], jnp.asarray(src), jnp.asarray(dst))
+        self._host["cow_copies"] += len(pairs)
+        self._tbl_dirty = True
+
+    def _preempt_for(self, slot: int) -> bool:
+        """Swap out one scheduler-chosen victim to free blocks. Candidates
+        are the decode residents other than ``slot`` (the active chunk job
+        is never in ``_slot_req``, so it is implicitly protected). False
+        when no other resident is preemptible."""
+        cands = []
+        for s, r in self._slot_req.items():
+            if s == slot:
+                continue
+            remaining = (len(r.prompt) + r.max_new_tokens - 1
+                         - self._written[s])
+            cands.append((s, self._admit_seq.get(s, 0), remaining))
+        victim = self.scheduler.pick_victim(cands, self.preempt)
+        if victim is None:
+            return False
+        self._swap_out(victim)
+        return True
 
     def _push_tables(self) -> None:
         """Push the host block-table mirror to the device iff it changed
@@ -543,11 +760,157 @@ class ServeEngine:
 
     def _ensure_decode_blocks(self) -> None:
         """Grow resident slots' block tables to cover the upcoming decode
-        chunk (lazy allocation at block-boundary crossings)."""
-        for s, r in self._slot_req.items():
+        chunk (lazy allocation at block-boundary crossings) and resolve
+        copy-on-write for shared blocks in each slot's write range. Under
+        optimistic admission either step may preempt a victim — possibly
+        one of the slots this loop has yet to visit."""
+        for s in list(self._slot_req):
+            if s not in self._slot_req:
+                continue            # preempted by an earlier iteration
+            r = self._slot_req[s]
             cap = len(r.prompt) + r.max_new_tokens - 1
-            self._ensure(s, min(self._written[s] + self.decode_block, cap))
+            w = self._written[s]
+            target = min(w + self.decode_block, cap)
+            if not self._ensure(s, target):
+                continue            # s itself was swapped out
+            if s in self._slot_req:
+                self._cow_guard(s, w, target)
         self._push_tables()
+
+    # ------------------------------------------------------------------
+    # Preemption: swap-out / swap-in of quantized blocks
+    # ------------------------------------------------------------------
+
+    def _attn_layer_caches(self):
+        """Every attention layer's cache dict, in a stable order (the
+        swap payload lists follow this order)."""
+        for seg in self.state["cache"]["segments"]:
+            for li in sorted(seg, key=int):
+                yield seg[li]
+
+    def _gather_blocks(self, ids) -> List[Dict]:
+        """Pull the listed pool blocks' int8 payload + scales to host
+        buffers, one dict per attention layer — one batched device_get
+        for the whole swap, not a sync per (layer, leaf)."""
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        gathered = [{k: layer["self"][k][:, idx] for k in _POOL_KEYS}
+                    for layer in self._attn_layer_caches()]
+        return jax.device_get(gathered)
+
+    def _scatter_blocks(self, slot: int, ids, payload: List[Dict],
+                        w: int) -> None:
+        """Restore swapped payloads into freshly allocated pool blocks and
+        rebuild the slot's per-layer lengths / position at ``w`` written
+        tokens."""
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        for layer, pay in zip(self._attn_layer_caches(), payload):
+            sa = layer["self"]
+            if len(ids):
+                for k in _POOL_KEYS:
+                    sa[k] = sa[k].at[:, idx].set(jnp.asarray(pay[k]))
+            sa["length"] = sa["length"].at[:, slot].set(w)
+        cache = self.state["cache"]
+        cache["position"] = cache["position"].at[slot].set(w)
+
+    def _swap_out(self, slot: int) -> None:
+        """Preempt ``slot``: gather its quantized blocks into a host
+        buffer (int8 payloads move 4x cheaper than an fp32 cache would),
+        release the blocks to the pool, and park the request on the swap
+        queue for later restore. Works for decode residents and for the
+        in-progress chunk job (which resumes from its last finished
+        window)."""
+        t0 = time.perf_counter()
+        job = (self._chunk_job
+               if self._chunk_job is not None
+               and self._chunk_job["slot"] == slot else None)
+        w = job["c0"] if job is not None else self._written[slot]
+        # only blocks holding written tokens travel; lazily grown tail
+        # blocks past ``w`` hold nothing and are re-allocated on restore
+        ids = self.alloc.owned(slot)[:self.alloc.blocks_for_tokens(w)]
+        payload = self._gather_blocks(ids)
+        nbytes = sum(a.nbytes for layer in payload for a in layer.values())
+        if job is not None:
+            rec = {"req": job["req"], "kind": "prefill", "w": w}
+            self._chunk_job = None
+        else:
+            req = self._slot_req.pop(slot)
+            self._written.pop(slot)
+            n_gen, out_row, last = jax.device_get(
+                (self.state["n_gen"][slot], self.state["out"][slot],
+                 self.state["tokens"][slot, 0]))
+            rec = {"req": req, "kind": "decode", "w": w,
+                   "n_gen": int(n_gen), "out": np.asarray(out_row),
+                   "last": int(last)}
+            self.state["active"] = self.state["active"].at[slot].set(False)
+        rec["payload"] = payload
+        rec["bytes"] = nbytes
+        self.alloc.release(slot)
+        self._admit_seq.pop(slot, None)
+        self._tbl_dirty = True
+        self._swapped.append(rec)
+        self._host["preemptions"] += 1
+        self._host["swap_out_bytes"] += nbytes
+        self._host["swap_s"] += time.perf_counter() - t0
+
+    def _try_swap_in(self) -> None:
+        """Restore swapped-out requests (FCFS) while slots and blocks
+        allow. The gate is the request's full remaining worst case — a
+        restore that could immediately become the next victim would
+        thrash swap bandwidth for no progress."""
+        while self._swapped:
+            rec = self._swapped[0]
+            req = rec["req"]
+            if rec["kind"] == "prefill" and self._chunk_job is not None:
+                return
+            free = self._free_slots()
+            if not free:
+                return
+            need = len(req.prompt) + req.max_new_tokens - 1
+            if self.alloc.blocks_for_tokens(need) > self.alloc.free_blocks:
+                return
+            self._restore(free[0], rec)
+            self._swapped.pop(0)
+            self._note_residency()
+
+    def _restore(self, slot: int, rec: Dict) -> None:
+        """Swap a preempted request back in: fresh blocks, scattered
+        payload, and the slot's sampling/output state rebuilt exactly as
+        it was — greedy decode resumes bit-identically."""
+        t0 = time.perf_counter()
+        req, w = rec["req"], rec["w"]
+        need = len(req.prompt) + req.max_new_tokens - 1
+        if self.admission == "reserve":
+            # preemption only triggers under optimistic admission, but a
+            # reserve-mode restore must re-debit to stay accounted
+            if not self.alloc.reserve(slot, need):
+                raise RuntimeError("swap-in gate admitted an unreservable "
+                                   "request — accounting bug")
+        else:
+            self.alloc.register(slot)
+        self.alloc.ensure(slot, w)
+        self._tbl_dirty = True
+        ids = self.alloc.owned(slot)
+        self._scatter_blocks(slot, ids, rec["payload"], w)
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+        if rec["kind"] == "prefill":
+            self._chunk_job = {"req": req, "slot": slot, "c0": w}
+        else:
+            st = self.state
+            keys = jax.random.fold_in(jax.random.PRNGKey(req.seed), req.uid)
+            st["tokens"] = st["tokens"].at[slot, 0].set(rec["last"])
+            st["out"] = st["out"].at[slot].set(jnp.asarray(rec["out"]))
+            st["n_gen"] = st["n_gen"].at[slot].set(rec["n_gen"])
+            st["active"] = st["active"].at[slot].set(True)
+            st["eos"] = st["eos"].at[slot].set(req.eos_id)
+            st["max_new"] = st["max_new"].at[slot].set(req.max_new_tokens)
+            st["temp"] = st["temp"].at[slot].set(req.temperature)
+            st["top_k"] = st["top_k"].at[slot].set(req.top_k)
+            st["keys"] = st["keys"].at[slot].set(keys)
+            self._slot_req[slot] = req
+            self._written[slot] = w
+        self._host["swap_in_bytes"] += rec["bytes"]
+        self._host["swap_s"] += time.perf_counter() - t0
 
     def _harvest(self) -> None:
         """Admission-boundary sync: pull finished slots' token buffers."""
@@ -572,8 +935,21 @@ class ServeEngine:
             req.done = True
             self.scheduler.on_finished(req)
             if self._paged:
+                if self.prefix_cache and req.generated:
+                    # content-address the decoded stream too (the last
+                    # sampled token is never written): a follow-up prompt
+                    # extending prompt+completion — a chat turn, say —
+                    # reuses these blocks. [0, true_w) is intact even for
+                    # an early-EOS slot: its post-EOS masked steps only
+                    # rewrote positions >= true_w.
+                    true_w = len(req.prompt) + int(n_gen[s]) - 1
+                    content = np.concatenate(
+                        [np.asarray(req.prompt, np.int32),
+                         np.asarray(req.generated[:-1], np.int32)])
+                    self.alloc.register_prefix(s, content, true_w)
                 self.alloc.release(s)       # blocks return to the pool
                 self._written.pop(s, None)
+                self._admit_seq.pop(s, None)
                 self._tbl_dirty = True      # row parked on the sentinel
 
     # ------------------------------------------------------------------
@@ -599,7 +975,11 @@ class ServeEngine:
 
     def _flush_partial(self) -> None:
         """Surface still-resident slots' tokens (budget-aborted drain):
-        their buffers are on device and already counted in the stats."""
+        their buffers are on device and already counted in the stats.
+        Swapped-out requests surface the tokens captured at preemption."""
+        for rec in self._swapped:
+            if rec["kind"] == "decode":
+                rec["req"].generated = rec["out"][:rec["n_gen"]].tolist()
         if not self._slot_req:
             return
         resident = sorted(self._slot_req)
@@ -615,7 +995,7 @@ class ServeEngine:
         (``done`` stays False)."""
         chunks = 0
         while ((self.scheduler.pending or self._slot_req
-                or self._chunk_job is not None)
+                or self._chunk_job is not None or self._swapped)
                and chunks * self.decode_block < max_steps):
             self.step()
             chunks += 1
@@ -679,11 +1059,16 @@ class ServeEngine:
                                            self.state["committed"]))
         d = dict(self._host)
         prefill_tokens = d.pop("prefill_tokens")
+        d["prompt_tokens_prefilled"] = d.pop("prompt_tokens")
         d["decode_steps"] = int(steps)
         d["tokens_out"] = int(committed) + prefill_tokens
         d["decode_step_s"] = (d["decode_s"] / max(int(steps), 1))
         d["max_residents"] = self._max_residents
         if self._paged:
+            d["prefix_lookups"] = self.alloc.prefix_lookups
+            d["prefix_hit_blocks"] = self.alloc.prefix_hit_blocks
+            d["prefix_cache_blocks"] = self.alloc.cached_blocks
+            d["prefix_evictions"] = self.alloc.prefix_evictions
             cap_tokens = self.num_blocks * self.block_size
             d["cache_tokens_capacity"] = cap_tokens
             d["peak_cache_tokens"] = self.alloc.peak_blocks * self.block_size

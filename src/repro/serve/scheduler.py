@@ -21,6 +21,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 POLICIES = ("fcfs", "sjf")
+PREEMPT_POLICIES = ("last_admitted", "longest_remaining")
 
 
 @dataclass
@@ -118,6 +119,30 @@ class Scheduler:
         for r in batch:
             self._queue.remove(r)
         return batch
+
+    # ---- preemption ----
+    @staticmethod
+    def pick_victim(candidates, mode: str = "last_admitted"):
+        """Choose which resident the engine swaps out when the block pool
+        runs dry under optimistic admission.
+
+        ``candidates``: (slot, admit_seq, remaining_tokens) triples for the
+        preemptible residents. ``last_admitted`` evicts the newest resident
+        (FCFS-fair: the oldest work keeps its cache warm);
+        ``longest_remaining`` evicts the resident with the most tokens
+        still to serve (frees the most block-seconds per swap, ties broken
+        newest-first). Returns the victim slot, or None when there is
+        nothing to preempt.
+        """
+        if mode not in PREEMPT_POLICIES:
+            raise ValueError(
+                f"unknown preemption policy {mode!r}; known: "
+                f"{PREEMPT_POLICIES}")
+        if not candidates:
+            return None
+        if mode == "longest_remaining":
+            return max(candidates, key=lambda c: (c[2], c[1]))[0]
+        return max(candidates, key=lambda c: c[1])[0]
 
     # ---- accounting ----
     def on_admitted(self, reqs, now: Optional[float] = None) -> None:

@@ -1,0 +1,120 @@
+"""Property test: BlockAllocator conservation under random op sequences.
+
+Drives reserve/register/ensure/share(COW)/release/swap-like churn with
+Hypothesis and checks, after every op, that block conservation holds
+(every block is in exactly one of free / evictable / mapped, and refcounts
+equal the number of table views), that refcounts never go negative, and
+that released slots leave only sentinel table entries. ``prefix_cache``
+traffic is generated from a tiny token alphabet so chains genuinely
+collide and share.
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.block_alloc import BlockAllocator, PoolDry  # noqa: E402
+
+NUM_BLOCKS, BLOCK_SIZE, SLOTS, TABLE_LEN = 8, 4, 4, 6
+MAX_TOKENS = TABLE_LEN * BLOCK_SIZE
+
+
+def _op():
+    return st.one_of(
+        st.tuples(st.just("reserve"), st.integers(0, SLOTS - 1),
+                  st.integers(1, MAX_TOKENS)),
+        st.tuples(st.just("register"), st.integers(0, SLOTS - 1),
+                  st.integers(1, MAX_TOKENS)),
+        st.tuples(st.just("ensure"), st.integers(0, SLOTS - 1),
+                  st.integers(1, MAX_TOKENS)),
+        st.tuples(st.just("cow"), st.integers(0, SLOTS - 1),
+                  st.integers(0, MAX_TOKENS - 1)),
+        st.tuples(st.just("release"), st.integers(0, SLOTS - 1),
+                  st.just(0)),
+        st.tuples(st.just("harvest_register"), st.integers(0, SLOTS - 1),
+                  st.just(0)),
+    )
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.lists(_op(), min_size=1, max_size=60),
+       st.randoms(use_true_random=False))
+def test_block_conservation_under_random_lifecycle(ops, rnd):
+    a = BlockAllocator(NUM_BLOCKS, BLOCK_SIZE, SLOTS, TABLE_LEN,
+                       prefix_cache=True)
+    prompts = {}                       # slot -> tokens it claims to hold
+    written = {}                       # slot -> tokens ensured so far
+
+    for kind, slot, n in ops:
+        active = slot in prompts
+        if kind in ("reserve", "register") and not active:
+            # tiny alphabet -> real chain collisions across iterations
+            toks = np.asarray(rnd.choices(range(3), k=n), np.int32)
+            ids, cached, partial = a.lookup(toks)
+            if kind == "reserve":
+                if a.reserve(slot, n, shared=ids, partial=partial):
+                    prompts[slot] = toks
+                    written[slot] = cached
+            else:
+                a.register(slot, shared=ids)
+                prompts[slot] = toks
+                written[slot] = cached
+        elif kind == "ensure" and active:
+            target = min(n, MAX_TOKENS)
+            try:
+                a.ensure(slot, target)
+            except (PoolDry, RuntimeError):
+                pass                   # dry pool / reservation exhausted
+            else:
+                covered = len(a.owned(slot)) * BLOCK_SIZE
+                start = written[slot]
+                end = min(max(target, start), covered)
+                if end > start:
+                    try:
+                        a.cow_range(slot, start, end)
+                    except (PoolDry, RuntimeError):
+                        pass           # partially applied: still consistent
+                    else:
+                        written[slot] = end
+        elif kind == "cow" and active:
+            end = min(n + 1, len(a.owned(slot)) * BLOCK_SIZE)
+            if end > n:
+                try:
+                    a.cow_range(slot, n, end)
+                except (PoolDry, RuntimeError):
+                    pass
+        elif kind == "release" and active:
+            a.release(slot)
+            assert (a.tables[slot] == NUM_BLOCKS).all()
+            prompts.pop(slot)
+            written.pop(slot)
+        elif kind == "harvest_register" and active:
+            upto = min(written[slot], len(prompts[slot]))
+            a.register_prefix(slot, prompts[slot], upto)
+        a.check()                      # conservation after every op
+
+    # full teardown returns every block to free/evictable
+    for slot in list(prompts):
+        a.release(slot)
+    a.check()
+    assert a.allocated_blocks == 0
+    assert len(a._free) + a.cached_blocks == NUM_BLOCKS
+    assert (a.tables == NUM_BLOCKS).all()
+    assert all(r == 0 for r in a._ref)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, MAX_TOKENS), min_size=1, max_size=10))
+def test_double_release_is_rejected_and_free_never_overflows(sizes):
+    a = BlockAllocator(NUM_BLOCKS, BLOCK_SIZE, SLOTS, TABLE_LEN)
+    for i, n in enumerate(sizes):
+        slot = i % SLOTS
+        if slot not in a._owned and a.reserve(slot, n):
+            a.ensure(slot, n)
+            a.release(slot)
+            # a second release of the same slot is a no-op (idempotent by
+            # design: the slot no longer owns anything)
+            assert a.release(slot) == 0
+            assert len(a._free) <= NUM_BLOCKS
+            a.check()

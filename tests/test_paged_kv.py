@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced_config
-from repro.kernels.kvq_attn.ops import kvq_paged_decode_attn
-from repro.kernels.kvq_attn.ref import (gather_paged_kv,
+from repro.kernels.kvq_attn.ops import copy_pool_blocks, kvq_paged_decode_attn
+from repro.kernels.kvq_attn.ref import (copy_pool_blocks_ref, gather_paged_kv,
                                         kvq_paged_decode_attn_ref)
 from repro.models import init_params
 from repro.serve.block_alloc import BlockAllocator
@@ -228,6 +228,27 @@ class TestPagedKernelParity:
         assert gs.shape == (1, Hkv, 3 * bs)
         np.testing.assert_array_equal(np.asarray(gs[0, :, 2 * bs:]),
                                       np.asarray(sk[3]))
+
+    def test_pool_block_copy_pallas_matches_ref(self, rng):
+        """The COW clone primitive: Pallas (interpret) and the XLA
+        scatter reference agree bitwise, pad pairs (dst >= NB) are
+        dropped, and untouched blocks are preserved."""
+        rep, NB, Hkv, bs, D = 2, 6, 2, 4, 8
+        kp = jax.random.randint(rng, (rep, NB, Hkv, bs, D), -127, 128,
+                                jnp.int32).astype(jnp.int8)
+        sk = jax.random.uniform(jax.random.fold_in(rng, 3),
+                                (rep, NB, Hkv, bs), jnp.float32)
+        src = jnp.asarray([4, 0, 0], jnp.int32)
+        dst = jnp.asarray([1, 5, NB], jnp.int32)      # last pair = padding
+        for pool in (kp, sk):
+            out_k = copy_pool_blocks(pool, src, dst, use_pallas=True)
+            out_r = copy_pool_blocks_ref(pool, src, dst)
+            np.testing.assert_array_equal(np.asarray(out_k),
+                                          np.asarray(out_r))
+            exp = np.array(pool)
+            exp[:, 1] = exp[:, 4]
+            exp[:, 5] = exp[:, 0]
+            np.testing.assert_array_equal(np.asarray(out_k), exp)
 
     def test_sentinel_blocks_do_not_leak_into_output(self, rng):
         """Positions past ``lengths`` (sentinel or stale blocks) must not

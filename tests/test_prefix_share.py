@@ -1,0 +1,455 @@
+"""Prefix-shared paged KV cache + preemption/swap-out.
+
+Covers the refcounted allocator's prefix index (rolling-hash chain, split
+blocks, copy-on-write, LRU eviction), token parity with prefix sharing on
+vs off (including COW at the split block), multi-turn reuse of decoded
+blocks, optimistic admission with scheduler-driven preemption (swap-out
+mid-decode resumes bit-exactly), the submit-time block-table feasibility
+check, and the memoized decode_block="auto" probe.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.serve.block_alloc import BlockAllocator, PoolDry
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import Scheduler
+
+
+def _req(uid, prompt, **kw):
+    return Request(uid=uid, prompt=np.asarray(prompt, np.int32), **kw)
+
+
+@pytest.fixture(scope="module")
+def served(rng):
+    cfg = get_reduced_config("qwen2.5-3b")
+    return cfg, init_params(cfg, rng)
+
+
+class TestPrefixIndex:
+    def _alloc(self, **kw):
+        kw.setdefault("num_blocks", 16)
+        kw.setdefault("block_size", 4)
+        kw.setdefault("slots", 4)
+        kw.setdefault("table_len", 8)
+        return BlockAllocator(**kw)
+
+    def test_full_chain_lookup_caps_below_prompt_end(self):
+        a = self._alloc()
+        toks = np.arange(12, dtype=np.int32)
+        a.register(0)
+        a.ensure(0, 12)
+        a.register_prefix(0, toks, 12)
+        a.release(0)
+        # identical prompt: the last full block is NOT taken (at least one
+        # tail token must be left to recompute), the split rule can't help
+        # because block 3 of the chain holds tokens the index never saw
+        ids, cached, partial = a.lookup(toks)
+        assert cached == 8 and len(ids) == 2 and not partial
+        # longer prompt sharing the full 12: all three blocks hit
+        ids, cached, partial = a.lookup(np.arange(20, dtype=np.int32))
+        assert cached == 12 and len(ids) == 3 and not partial
+
+    def test_split_block_matches_exact_divergence_point(self):
+        a = self._alloc()
+        a.register(0)
+        a.ensure(0, 7)                     # 1 full + 3-token split block
+        a.register_prefix(0, np.arange(7, dtype=np.int32), 7)
+        a.release(0)
+        other = np.array([0, 1, 2, 3, 4, 9, 9, 9], np.int32)  # diverges at 5
+        ids, cached, partial = a.lookup(other)
+        assert cached == 5 and partial     # 4 full + 1 shared split token
+        miss = np.array([0, 1, 2, 3, 9, 9, 9], np.int32)      # diverges at 4
+        ids, cached, partial = a.lookup(miss)
+        assert cached == 4 and not partial
+
+    def test_shared_map_refcounts_and_release_to_lru(self):
+        a = self._alloc(num_blocks=4)
+        toks = np.arange(8, dtype=np.int32)
+        a.register(0)
+        a.ensure(0, 8)
+        a.register_prefix(0, toks, 8)
+        assert a.release(0) == 2
+        assert a.cached_blocks == 2 and a.allocated_blocks == 0
+        ids, cached, _ = a.lookup(np.arange(12, dtype=np.int32))
+        assert a.reserve(1, 12, shared=ids)
+        assert a.allocated_blocks == 2     # resurrected from the LRU
+        assert a.cached_blocks == 0
+        a.check()
+
+    def test_eviction_frees_index_entries_under_pressure(self):
+        a = self._alloc(num_blocks=4)
+        for i, slot in enumerate((0, 1)):
+            toks = np.arange(8, dtype=np.int32) + 100 * i
+            a.register(slot)
+            a.ensure(slot, 8)
+            a.register_prefix(slot, toks, 8)
+            a.release(slot)
+        assert a.cached_blocks == 4
+        a.register(2)
+        a.ensure(2, 12)                    # must evict 3 LRU blocks
+        assert a.prefix_evictions == 3
+        # the evicted (oldest) chain is gone, the newer one partially lives
+        assert a.lookup(np.arange(12, dtype=np.int32))[1] == 0
+        a.check()
+
+    def test_cow_on_frozen_split_block_preserves_index_content(self):
+        """A non-owner writing below a registered extent must copy: the
+        index keeps addressing the original bytes."""
+        a = self._alloc()
+        a.register(0)
+        a.ensure(0, 7)
+        a.register_prefix(0, np.arange(7, dtype=np.int32), 7)
+        a.release(0)
+        probe = np.array([0, 1, 2, 3, 4, 9, 9], np.int32)
+        ids, cached, partial = a.lookup(probe)
+        assert cached == 5 and partial
+        a.register(1, shared=ids)
+        split = ids[-1]
+        pairs = a.cow_range(1, 5, 7)       # writes offsets 1.. of the split
+        assert pairs and pairs[0][0] == split
+        assert a.owned(1)[-1] == pairs[0][1]
+        # original stays resurrectable with its full 3-token extent
+        ids2, cached2, _ = a.lookup(np.arange(7, dtype=np.int32))
+        assert split in ids2 and cached2 == 6
+        a.check()
+
+    def test_slot_id_reuse_does_not_inherit_write_privilege(self):
+        """Ownership dies with the filling slot: a new request admitted
+        into a recycled slot id must COW a still-shared split block, not
+        write into it in place (slot 1 keeps mapping it)."""
+        a = self._alloc()
+        a.register(2)
+        a.ensure(2, 7)
+        a.register_prefix(2, np.arange(7, dtype=np.int32), 7)
+        probe = np.array([0, 1, 2, 3, 4, 9, 9], np.int32)
+        ids, cached, partial = a.lookup(probe)
+        a.register(1, shared=ids)          # sharer keeps the block alive
+        split = ids[-1]
+        a.release(2)                       # owner leaves, ref stays 1
+        ids2, cached2, _ = a.lookup(probe)
+        assert split in ids2
+        a.register(2, shared=ids2)         # same slot id, new request
+        pairs = a.cow_range(2, cached2, 7)
+        assert [s for s, _ in pairs] == [split]
+        a.check()
+
+    def test_owner_appends_beyond_extent_without_copy(self):
+        a = self._alloc()
+        a.register(0)
+        a.ensure(0, 6)
+        a.register_prefix(0, np.arange(6, dtype=np.int32), 6)
+        # the filling slot keeps writing past the registered 2-token extent
+        assert a.cow_range(0, 6, 8) == []
+        a.check()
+
+    def test_reserve_accounts_for_resurrected_shared_hits(self):
+        """Shared hits sitting on the evictable LRU leave the obtainable
+        pool when mapped: a reservation that would rely on those same
+        blocks must refuse up front, not crash later in ensure()."""
+        a = self._alloc(num_blocks=4)
+        toks = np.arange(8, dtype=np.int32)
+        a.register(0)
+        a.ensure(0, 8)
+        a.register_prefix(0, toks, 8)
+        a.release(0)                       # 2 registered blocks -> LRU
+        assert a.reserve(1, 8)             # resident takes the other 2
+        a.ensure(1, 8)
+        ids, cached, partial = a.lookup(np.arange(16, dtype=np.int32))
+        assert len(ids) == 2
+        assert not a.reserve(2, 16, shared=ids, partial=partial)
+        a.check()
+
+    def test_harvest_extends_split_block_and_walks_past_it(self):
+        """Admission registers a split block; a later pass over the
+        decoded stream extends its stored content and promotes it with a
+        full entry once filled, so the chain stays walkable past it."""
+        a = self._alloc()
+        prompt = np.arange(6, dtype=np.int32)
+        a.register(0)
+        a.ensure(0, 6)
+        a.register_prefix(0, prompt, 6)            # split extent 2
+        full = np.arange(11, dtype=np.int32)       # prompt + 5 decoded
+        a.ensure(0, 11)
+        a.register_prefix(0, full, 11)             # harvest-style pass
+        a.release(0)
+        ids, cached, partial = a.lookup(np.arange(12, dtype=np.int32))
+        assert cached == 11 and partial            # 2 full + 3-token split
+        # the original divergence point still matches via stored content
+        probe = np.array([0, 1, 2, 3, 4, 9, 9], np.int32)
+        assert a.lookup(probe)[1] == 5
+        a.check()
+
+    def test_pool_dry_raises_for_unreserved_slot(self):
+        a = self._alloc(num_blocks=2)
+        a.register(0)
+        a.ensure(0, 8)
+        a.register(1)
+        with pytest.raises(PoolDry):
+            a.ensure(1, 4)
+        a.check()
+
+
+class TestPrefixSharingEngine:
+    BS = 16
+
+    def _engine(self, served, **kw):
+        cfg, params = served
+        kw.setdefault("slots", 4)
+        kw.setdefault("cache_len", 64)
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("block_size", self.BS)
+        kw.setdefault("num_blocks", 32)
+        kw.setdefault("max_seq_len", 96)
+        return ServeEngine(cfg, params, **kw)
+
+    def _shared_reqs(self, n=3, prefix_len=40, tail=5, max_new=6):
+        rng = np.random.default_rng(3)
+        prefix = rng.integers(0, 250, prefix_len).astype(np.int32)
+        return [_req(i, np.concatenate(
+                    [prefix, ((np.arange(tail) * (i + 3) + i) % 250)
+                     .astype(np.int32)]), max_new_tokens=max_new)
+                for i in range(n)]
+
+    def _run_staged(self, eng, reqs):
+        """First request warms the prefix cache, the rest follow."""
+        eng.submit(reqs[0])
+        eng.run_until_drained()
+        for r in reqs[1:]:
+            eng.submit(r)
+        return eng.run_until_drained()
+
+    def test_token_parity_prefix_sharing_on_vs_off(self, served):
+        """Greedy outputs of a shared-prefix batch are identical with
+        sharing on vs off — including requests that COW the split block
+        (the 40-token prefix ends 8 tokens into a block)."""
+        reqs_on = self._shared_reqs()
+        reqs_off = self._shared_reqs()
+        on = self._run_staged(self._engine(served, prefix_cache=True),
+                              reqs_on)
+        off = self._run_staged(self._engine(served, prefix_cache=False),
+                               reqs_off)
+        assert all(r.done for r in reqs_on + reqs_off)
+        assert [r.generated for r in reqs_on] == \
+            [r.generated for r in reqs_off]
+        # the 2 followers each found >= the 32-token full-block chain
+        assert on["prefix_hit_tokens"] >= 64
+        assert on["cow_copies"] >= 2          # split block cloned per fork
+        assert off["prefix_hit_tokens"] == 0 and off["cow_copies"] == 0
+        # the whole point: followers prefilled only their tails
+        assert on["prompt_tokens_prefilled"] < \
+            off["prompt_tokens_prefilled"] - 2 * self.BS
+
+    def test_cow_protects_original_for_reissued_prompt(self, served):
+        """After divergent followers wrote 'their' copies of the split
+        block, re-issuing the original prompt must still reproduce the
+        unshared output — the regression COW-on-frozen-extent guards."""
+        reqs = self._shared_reqs(n=3)
+        eng = self._engine(served, prefix_cache=True)
+        self._run_staged(eng, reqs)
+        reissue = _req(9, reqs[0].prompt, max_new_tokens=6)
+        eng.submit(reissue)
+        eng.run_until_drained()
+        assert reissue.generated == reqs[0].generated
+
+    def test_multi_turn_continuation_reuses_decoded_blocks(self, served):
+        """Harvest registers prompt+completion content: a follow-up prompt
+        extending the finished conversation hits blocks written by
+        *decode*, and still matches the unshared engine's tokens."""
+        rng = np.random.default_rng(5)
+        turn1 = rng.integers(0, 250, 20).astype(np.int32)
+
+        def run(prefix_cache):
+            eng = self._engine(served, prefix_cache=prefix_cache)
+            r1 = _req(0, turn1, max_new_tokens=8)
+            eng.submit(r1)
+            eng.run_until_drained()
+            turn2 = np.concatenate(
+                [turn1, np.asarray(r1.generated, np.int32),
+                 rng.integers(0, 250, 4).astype(np.int32)])
+            r2 = _req(1, turn2, max_new_tokens=5)
+            eng.submit(r2)
+            stats = eng.run_until_drained()
+            return r1.generated, r2.generated, stats
+
+        g1_on, g2_on, on = run(True)
+        rng = np.random.default_rng(5)
+        turn1 = rng.integers(0, 250, 20).astype(np.int32)
+        g1_off, g2_off, _ = run(False)
+        assert (g1_on, g2_on) == (g1_off, g2_off)
+        # turn 2 reused more than turn 1's whole prompt: content written
+        # by decode (the split block's extended extent) hit too
+        assert on["prefix_hit_tokens"] > 20
+
+    def test_wave_admissions_register_and_later_waves_hit(self, served):
+        """Requests admitted in one batched wave register their prompts;
+        a second wave of the same prompts prefills only tails."""
+        def reqs(uid0):
+            return [_req(uid0 + i,
+                         np.concatenate([np.arange(34, dtype=np.int32),
+                                         np.asarray([i, i + 1], np.int32)]),
+                         max_new_tokens=4) for i in range(2)]
+
+        eng = self._engine(served, prefix_cache=True)
+        for r in reqs(0):
+            eng.submit(r)
+        eng.run_until_drained()
+        assert eng.stats()["prefix_hit_tokens"] == 0   # cold cache
+        wave2 = reqs(10)
+        for r in wave2:
+            eng.submit(r)
+        stats = eng.run_until_drained()
+        assert all(r.done for r in wave2)
+        assert stats["prefix_hit_tokens"] >= 2 * 32
+
+
+class TestPreemption:
+    def _mk(self, uid, plen, mn):
+        return _req(uid, (np.arange(plen) * 7 + uid) % 250,
+                    max_new_tokens=mn)
+
+    def _opt_engine(self, served, **kw):
+        cfg, params = served
+        kw.setdefault("slots", 4)
+        kw.setdefault("cache_len", 64)
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("block_size", 8)
+        kw.setdefault("max_seq_len", 96)
+        kw.setdefault("admission", "optimistic")
+        kw.setdefault("prefix_cache", False)
+        kw.setdefault("decode_block", 4)
+        return ServeEngine(cfg, params, **kw)
+
+    def test_pick_victim_policies(self):
+        cands = [(0, 5, 40), (1, 9, 10), (2, 2, 80)]
+        assert Scheduler.pick_victim(cands, "last_admitted") == 1
+        assert Scheduler.pick_victim(cands, "longest_remaining") == 2
+        assert Scheduler.pick_victim([], "last_admitted") is None
+        with pytest.raises(ValueError, match="preemption"):
+            Scheduler.pick_victim(cands, "coin_flip")
+
+    def test_swap_out_mid_decode_resumes_exact_tokens(self, served):
+        """Over-committed optimistic pool: decode growth preempts a
+        victim whose blocks swap to the host; after restore its greedy
+        stream is identical to an uninterrupted run."""
+        cfg, params = served
+        solo_req = self._mk(9, 10, 30)
+        solo = ServeEngine(cfg, params, slots=1, cache_len=64,
+                           kv_layout="paged", block_size=8, num_blocks=32,
+                           max_seq_len=96, decode_block=4)
+        solo.submit(solo_req)
+        solo.run_until_drained()
+        # 8-block pool; three requests each ultimately need 5 blocks
+        eng = self._opt_engine(served, num_blocks=8)
+        reqs = [self._mk(0, 10, 30), self._mk(9, 10, 30),
+                self._mk(2, 10, 30)]
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run_until_drained(max_steps=50_000)
+        assert all(r.done for r in reqs)
+        assert [len(r.generated) for r in reqs] == [30, 30, 30]
+        assert stats["preemptions"] >= 1
+        assert stats["swap_out_bytes"] == stats["swap_in_bytes"] > 0
+        assert reqs[1].generated == solo_req.generated
+        # conservation after the churn
+        assert eng.alloc.allocated_blocks == 0
+        assert (eng.alloc.tables == eng.num_blocks).all()
+
+    def test_optimistic_admits_more_residents_than_reserve(self, served):
+        """The concurrency win: with prompt-footprint admission the same
+        pool holds more co-residents than worst-case reservation."""
+        def run(admission):
+            eng = self._opt_engine(served, num_blocks=10,
+                                   admission=admission)
+            reqs = [self._mk(i, 8, 24) for i in range(4)]
+            for r in reqs:
+                eng.submit(r)
+            stats = eng.run_until_drained(max_steps=50_000)
+            assert all(r.done for r in reqs)
+            return stats
+
+        res = run("reserve")
+        opt = run("optimistic")
+        assert opt["max_residents"] > res["max_residents"]
+        assert res["preemptions"] == 0
+
+    def test_preempted_chunk_job_resumes(self, served):
+        """A long prompt mid-chunked-prefill can itself be swapped out
+        (no other victim) and restores from its last finished window."""
+        eng = self._opt_engine(served, slots=2, num_blocks=8,
+                               prefill_chunk=16, max_seq_len=96)
+        long_req = self._mk(0, 60, 4)          # 8 blocks for prompt alone
+        rival = self._mk(1, 8, 30)
+        eng.submit(long_req)
+        eng.submit(rival)
+        stats = eng.run_until_drained(max_steps=50_000)
+        assert long_req.done and rival.done
+        assert len(long_req.generated) == 4 and len(rival.generated) == 30
+        assert stats["preemptions"] >= 1
+
+    @pytest.mark.slow
+    def test_preemption_thrash_stress(self, served):
+        """Sustained over-commit: a dozen decode-heavy requests on a pool
+        a fraction of their aggregate need, with sharing enabled. Every
+        request drains with its exact budget, blocks conserve, and the
+        engine actually preempted (no silent fallback to reservation)."""
+        eng = self._opt_engine(served, slots=6, num_blocks=16,
+                               prefix_cache=True, max_seq_len=96)
+        rng = np.random.default_rng(11)
+        reqs = []
+        for i in range(12):
+            plen = int(rng.integers(4, 30))
+            reqs.append(self._mk(i, plen, int(rng.integers(8, 28))))
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run_until_drained(max_steps=200_000)
+        assert all(r.done for r in reqs)
+        assert [len(r.generated) for r in reqs] == \
+            [r.max_new_tokens for r in reqs]
+        assert stats["preemptions"] >= 1
+        assert eng.alloc.allocated_blocks == 0
+        assert eng.alloc.free_blocks == eng.num_blocks
+        eng.alloc.check()
+
+
+class TestFeasibilityAndProbe:
+    def test_submit_rejects_block_table_overflow_with_requirement(self,
+                                                                  served):
+        """A request whose block count exceeds the table width is rejected
+        at submit() with the computed need — not a mid-chunk crash in
+        BlockAllocator.ensure."""
+        cfg, params = served
+        eng = ServeEngine(cfg, params, slots=2, cache_len=64,
+                          kv_layout="paged", block_size=16, num_blocks=16,
+                          max_seq_len=128, table_len=4)
+        with pytest.raises(ValueError,
+                           match=r"needs 5 block-table entries.*table_len=4"):
+            eng.submit(_req(0, np.arange(60), max_new_tokens=8))  # 67 tokens
+        # within the table: accepted
+        eng.submit(_req(1, np.arange(50), max_new_tokens=8))      # 57 tokens
+
+    def test_auto_probe_memoized_per_config(self, served, monkeypatch):
+        """decode_block="auto" probes once per (config, policy, slots,
+        layout) within the process; a second engine reuses the result."""
+        from repro.serve import engine as E
+        cfg, params = served
+        monkeypatch.setattr(E, "_PROBE_CACHE", {})
+        calls = []
+        orig = ServeEngine._probe_decode_block
+
+        def counting(self, *a, **kw):
+            calls.append(1)
+            return orig(self, *a, **kw)
+
+        monkeypatch.setattr(ServeEngine, "_probe_decode_block", counting)
+        e1 = ServeEngine(cfg, params, slots=2, cache_len=64,
+                         decode_block="auto")
+        e2 = ServeEngine(cfg, params, slots=2, cache_len=64,
+                         decode_block="auto")
+        assert len(calls) == 1
+        assert e2.decode_block == e1.decode_block
+        # a different slot count is a different compiled program: re-probe
+        ServeEngine(cfg, params, slots=4, cache_len=64, decode_block="auto")
+        assert len(calls) == 2
