@@ -7,11 +7,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.kvq_attn import kernel as K
-from repro.kernels.kvq_attn.ref import (copy_pool_blocks_ref,
+from repro.kernels.kvq_attn.ref import (chunk_commit_ids, copy_pool_blocks_ref,
                                         kvq_decode_attn_ref,
-                                        kvq_paged_decode_attn_ref)
+                                        kvq_paged_decode_attn_ref,
+                                        scatter_chunk_kv)
 
 _INTERPRET = jax.default_backend() != "tpu"
+
+
+def commit_chunk_kv(cache: dict, k_q, v_q, s_k, s_v, block_tbl,
+                    offset, chunk_len) -> dict:
+    """Commit a batch of prefill windows into one layer's block pool, with
+    per-row write offsets.
+
+    cache: layer dict holding pool leaves k_q/v_q (NB, Hkv, bs, D) and
+    s_k/s_v (NB, Hkv, bs). k_q/v_q values (n, Hkv, C, D) int, s_k/s_v
+    (n, Hkv, C) fp32: the quantized window K/V of ``n`` slots, each
+    starting at absolute token position ``offset[i]`` with ``chunk_len[i]``
+    real tokens. block_tbl (n, T): each row's (truncated) block table.
+    Destinations are resolved once (`chunk_commit_ids`) and shared by the
+    four leaf scatters; pad rows/positions land on the sentinel and drop.
+    XLA's batched scatter is already memory-bound-optimal here, so the
+    same path serves every backend (a Pallas variant would only re-tile
+    the identical HBM traffic).
+    """
+    bs = cache["k_q"].shape[2]
+    nb = cache["k_q"].shape[0]
+    blk, off = chunk_commit_ids(block_tbl, offset, chunk_len, k_q.shape[2],
+                                bs, nb)
+    new = dict(cache)
+    new["k_q"] = scatter_chunk_kv(cache["k_q"], jnp.swapaxes(k_q, 1, 2),
+                                  blk, off)
+    new["v_q"] = scatter_chunk_kv(cache["v_q"], jnp.swapaxes(v_q, 1, 2),
+                                  blk, off)
+    new["s_k"] = scatter_chunk_kv(cache["s_k"], jnp.swapaxes(s_k, 1, 2),
+                                  blk, off)
+    new["s_v"] = scatter_chunk_kv(cache["s_v"], jnp.swapaxes(s_v, 1, 2),
+                                  blk, off)
+    return new
 
 
 def copy_pool_blocks(pool, src, dst,

@@ -65,6 +65,43 @@ def copy_pool_blocks_ref(pool: jnp.ndarray, src: jnp.ndarray,
                                mode="drop")
 
 
+def chunk_commit_ids(block_tbl: jnp.ndarray, offset: jnp.ndarray,
+                     chunk_len: jnp.ndarray, window: int, page_size: int,
+                     num_blocks: int):
+    """Per-row (pool block, in-block offset) destinations for a batched
+    tail-prefill commit with per-row write offsets.
+
+    block_tbl (n, T) int32: each row's block table (already truncated to
+    the walked prefix); offset (n,) int32: absolute token position of each
+    row's first window token; chunk_len (n,) int32: real tokens in the
+    ``window``-wide window (the rest is padding). Returns (blk (n, window),
+    off (n, window)): window position j of row i lands at
+    ``pool[blk[i, j], :, off[i, j]]``; positions at or beyond ``chunk_len``
+    (and whole padding rows, whose ``chunk_len`` is 0) point at the
+    ``num_blocks`` sentinel so the scatter drops them.
+    """
+    T = block_tbl.shape[1]
+    abs_pos = offset[:, None] + jnp.arange(window)[None]        # (n, C)
+    blk = jnp.take_along_axis(
+        block_tbl, jnp.minimum(abs_pos // page_size, T - 1), axis=1)
+    blk = jnp.where(jnp.arange(window)[None] < chunk_len[:, None],
+                    blk, num_blocks)
+    return blk, abs_pos % page_size
+
+
+def scatter_chunk_kv(pool: jnp.ndarray, vals: jnp.ndarray,
+                     blk: jnp.ndarray, off: jnp.ndarray) -> jnp.ndarray:
+    """Batched scatter commit of a prefill window into the block pool.
+
+    pool (NB, Hkv, bs, ...): one layer's K/V payload or scales.
+    vals (n, C, Hkv, ...): window tokens, sequence-major. blk/off (n, C)
+    from :func:`chunk_commit_ids`; sentinel blocks drop their write. The
+    two advanced indices bracket the head slice, so result batch dims
+    (n, C) lead and ``vals`` lines up without a transpose.
+    """
+    return pool.at[blk, :, off].set(vals, mode="drop")
+
+
 def kvq_paged_decode_attn_ref(q, k_pool, v_pool, s_k, s_v, block_tbl,
                               lengths):
     """Block-table decode attention oracle: gather, then dense ref.

@@ -71,6 +71,13 @@ def main():
                     help="paged admission: reserve worst-case blocks up "
                          "front, or admit on prompt footprint and preempt "
                          "(swap out) a resident when the pool runs dry")
+    ap.add_argument("--tail-batch", type=int, default=0,
+                    help="max tail/chunked prefills advanced per batched "
+                         "wave (0 = every slot, 1 = serialized legacy "
+                         "path)")
+    ap.add_argument("--no-prefix-affinity", action="store_true",
+                    help="disable chain-grouped scheduling of prefix-hit "
+                         "requests")
     ap.add_argument("--preempt", default="last_admitted",
                     choices=("last_admitted", "longest_remaining"),
                     help="victim policy for optimistic-admission "
@@ -92,7 +99,9 @@ def main():
               "num_blocks": args.num_blocks or None,
               "max_seq_len": args.max_seq_len or None,
               "prefix_cache": not args.no_prefix_cache,
-              "admission": args.admission, "preempt": args.preempt}
+              "admission": args.admission, "preempt": args.preempt,
+              "tail_batch": args.tail_batch,
+              "prefix_affinity": not args.no_prefix_affinity}
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
                          cache_len=args.cache_len,
                          decode_block=decode_block,

@@ -479,42 +479,46 @@ def attn_decode(cfg: ModelConfig, ctx: QuantCtx, p: Dict, x1: jnp.ndarray,
 
 def attn_chunk_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict,
                        x: jnp.ndarray, rope, cache: Dict,
-                       tbl_row: jnp.ndarray, slot: jnp.ndarray,
+                       tbl: jnp.ndarray, slot: jnp.ndarray,
                        offset: jnp.ndarray, chunk_len: jnp.ndarray):
-    """One fixed-size window of an incremental (chunked / tail) prefill,
-    one slot.
+    """One fixed-size window of an incremental (chunked / tail) prefill
+    for a *batch* of slots with per-row offsets.
 
-    x (1, C, d): window of the prompt whose first token sits at absolute
-    position ``offset``; only the first ``chunk_len`` rows are real (the
-    final window is right-padded). Queries attend to the ``offset`` tokens
-    already committed to the pool (gathered through ``tbl_row`` and
-    dequantized tile-by-tile at read, like decode) plus the window itself
-    (causal, exact bf16 K/V). The window's K/V are quantized and scattered
-    through the table, appending blocks the allocator grew for this window.
+    x (n, C, d): each row is a window of one slot's prompt whose first
+    token sits at absolute position ``offset[i]``; only the first
+    ``chunk_len[i]`` positions are real (windows are right-padded, and
+    whole padding rows carry ``chunk_len == 0``). Queries attend to the
+    ``offset[i]`` tokens already committed to the pool (gathered through
+    the row's table ``tbl[i]`` and dequantized at read, like decode) plus
+    the window itself (causal, exact bf16 K/V). The window's K/V are
+    quantized and scattered through the table with per-row write offsets
+    (``kernels.kvq_attn.ops.commit_chunk_kv``), appending blocks the
+    allocator grew for each row's window.
 
     Prefix sharing rides on this contract unchanged: for a prefix-hit
-    admission ``offset`` is the cached-token count, so the "history" is
-    another request's blocks mapped into ``tbl_row`` (refcounted by the
+    admission ``offset[i]`` is the cached-token count, so the "history" is
+    another request's blocks mapped into ``tbl[i]`` (refcounted by the
     allocator) — including a shared *split block* the offset may point
     into mid-block. The engine resolves copy-on-write for every shared
-    block in the write range [offset, offset + chunk_len) before calling,
-    so the scatter below only ever lands in blocks this slot exclusively
-    owns; the history mask (``kpos < offset``) keeps reads inside the
-    shared extent.
+    block in each row's write range [offset, offset + chunk_len) before
+    calling, so the scatter only ever lands in blocks the row's slot
+    exclusively owns; the history mask (``kpos < offset``) keeps reads
+    inside the shared extent. Rows are mutually independent — a batched
+    wave computes exactly what the same windows would serially.
 
     Note: history keys are read back *quantized*, so a chunked/tail
     prefill is numerically the serving-cache path, not bit-identical to a
     one-shot prefill — same contract as any PagedAttention-style chunked
     prefill over a quantized cache.
     """
+    from repro.kernels.kvq_attn.ops import commit_chunk_kv
     from repro.kernels.kvq_attn.ref import gather_paged_kv
-    B, C, _ = x.shape                                 # B == 1
+    B, C, _ = x.shape                                 # B = slot-batch n
     q, k, v = _qkv(cfg, ctx, p, x, x, rope, None)
     bs = cache["k_q"].shape[2]
-    T = tbl_row.shape[0]
+    T = tbl.shape[1]
     Lh = T * bs
-    tbl = tbl_row[None]                               # (1, T)
-    # dequantized history, sequence-major (1, Lh, Hkv, D)
+    # dequantized history, head-major (n, Hkv, Lh, D) -> seq-major
     kh = (gather_paged_kv(cache["k_q"], tbl).astype(jnp.float32)
           * gather_paged_kv(cache["s_k"], tbl)[..., None])
     vh = (gather_paged_kv(cache["v_q"], tbl).astype(jnp.float32)
@@ -530,35 +534,26 @@ def attn_chunk_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict,
     scale = cfg.resolved_head_dim ** -0.5
     scores = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32) * scale,
                         kall)
-    # key j < Lh is history (valid iff j < offset: allocated-but-unwritten
-    # tail positions hold garbage); key j >= Lh is chunk token j - Lh
-    # (causal within the chunk, pad keys beyond chunk_len masked)
+    # key j < Lh is history (valid iff j < offset[row]: allocated-but-
+    # unwritten tail positions hold garbage); key j >= Lh is chunk token
+    # j - Lh (causal within the chunk, pad keys beyond chunk_len masked)
     kj = jnp.arange(Lh + C)
     qi = jnp.arange(C)
     hist = kj < Lh
     kpos = jnp.where(hist, kj, kj - Lh)
-    mask = jnp.where(hist[None, :], kpos[None, :] < offset,
-                     (kpos[None, :] <= qi[:, None])
-                     & (kpos[None, :] < chunk_len))
-    scores = jnp.where(mask[None, :, None, :], scores, -1e30)
+    mask = jnp.where(hist[None, None, :],
+                     kpos[None, None, :] < offset[:, None, None],
+                     (kpos[None, None, :] <= qi[None, :, None])
+                     & (kpos[None, None, :] < chunk_len[:, None, None]))
+    scores = jnp.where(mask[:, :, None, :], scores, -1e30)
     pr = jax.nn.softmax(scores, axis=-1)
-    pr = jnp.where(mask[None, :, None, :], pr, 0.0)
+    pr = jnp.where(mask[:, :, None, :], pr, 0.0)
     out = jnp.einsum("bqhk,bkhd->bqhd", pr, vall)
     y = qlinear(ctx, out.reshape(B, C, cfg.q_dim).astype(x.dtype), p["wo"])
-    # commit the chunk through the table
+    # commit every row's window through its table (per-row write offsets)
     k_q1, v_q1, s_k1, s_v1 = quantize_kv_for_cache(ctx, p, k, v)
-    abs_pos = offset + jnp.arange(C)
-    blk = tbl_row[jnp.minimum(abs_pos // bs, T - 1)]
-    blk = jnp.where(jnp.arange(C) < chunk_len, blk, cache["k_q"].shape[0])
-    off = abs_pos % bs
-    new = dict(cache)
-    new["k_q"] = cache["k_q"].at[blk, :, off].set(
-        jnp.swapaxes(k_q1[0], 0, 1), mode="drop")
-    new["v_q"] = cache["v_q"].at[blk, :, off].set(
-        jnp.swapaxes(v_q1[0], 0, 1), mode="drop")
-    new["s_k"] = cache["s_k"].at[blk, :, off].set(
-        jnp.swapaxes(s_k1[0], 0, 1), mode="drop")
-    new["s_v"] = cache["s_v"].at[blk, :, off].set(
-        jnp.swapaxes(s_v1[0], 0, 1), mode="drop")
-    new["length"] = cache["length"].at[slot].set(offset + chunk_len)
+    new = commit_chunk_kv(cache, k_q1, v_q1, s_k1, s_v1, tbl, offset,
+                          chunk_len)
+    new["length"] = cache["length"].at[slot].set(offset + chunk_len,
+                                                 mode="drop")
     return y, new

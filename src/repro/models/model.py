@@ -426,53 +426,59 @@ def prefill_tail(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
                  tokens: jnp.ndarray, cache: Dict, slot: jnp.ndarray,
                  start: jnp.ndarray, n_tokens: jnp.ndarray,
                  hist_blocks: int = 0):
-    """Partial prefill from token offset ``start`` for a single slot.
+    """Partial prefill from per-row token offsets for a batch of slots.
 
     The entry point behind both *prefix-shared admission* (the first
-    ``start`` tokens were found in the prefix cache and their pool blocks
-    are already mapped into ``cache["block_tbl"][slot]`` — only the
-    uncached tail is computed) and *chunked prefill* (one fixed-size window
-    of a long prompt per call). ``tokens`` (1, C) int32 is the window whose
-    first token sits at absolute position ``start``; only the first
-    ``n_tokens`` are real (the window is right-padded so every call
-    compiles to the same program).
+    ``start[i]`` tokens were found in the prefix cache and their pool
+    blocks are already mapped into ``cache["block_tbl"][slot[i]]`` — only
+    the uncached tail is computed) and *chunked prefill* (one fixed-size
+    window of a long prompt per call). ``tokens`` (n, C) int32 holds one
+    window per row, row i's first token sitting at absolute position
+    ``start[i]``; only the first ``n_tokens[i]`` are real (windows are
+    right-padded so every call compiles to the same program). Rows with
+    ``slot`` at the out-of-range sentinel and ``n_tokens == 0`` are
+    padding — the engine buckets the wave width to a power of two — and
+    commit nothing.
 
-    Queries attend over the ``start`` tokens already resident in the pool —
-    gathered through the slot's table and dequantized at read, exactly what
-    decode reads (``blocks.attn_chunk_prefill``) — plus the window itself
-    (causal, exact bf16). The window's K/V are quantized and committed
-    through the table; the engine must have grown the table to cover
-    ``start + n_tokens`` tokens and resolved copy-on-write for any shared
-    block in that write range *before* calling.
+    Each row's queries attend over the ``start[i]`` tokens already
+    resident in the pool — gathered through the row's table and
+    dequantized at read, exactly what decode reads
+    (``blocks.attn_chunk_prefill``) — plus the window itself (causal,
+    exact bf16). The window's K/V are quantized and committed through the
+    table at per-row write offsets; the engine must have grown each table
+    to cover ``start + n_tokens`` tokens and resolved copy-on-write for
+    any shared block in that write range *before* calling. Rows are
+    independent, so a batched tail-wave produces exactly the tokens the
+    serialized single-slot path would.
 
     ``hist_blocks`` (trace-time constant > 0) truncates the table walk to
-    the slot's first ``hist_blocks`` entries so the history gather scales
-    with the prompt, not ``max_seq_len`` — it must cover ``start +
-    n_tokens`` tokens (the engine buckets it to a power of two to bound
-    compile variants). Requires the paged attention-only cache (see
-    ``init_cache`` with ``num_blocks``).
+    each row's first ``hist_blocks`` entries so the history gather scales
+    with the longest co-batched prompt, not ``max_seq_len`` — it must
+    cover every row's ``start + n_tokens`` tokens (the engine buckets it
+    to a power of two to bound compile variants). Requires the paged
+    attention-only cache (see ``init_cache`` with ``num_blocks``).
 
-    Returns (logits (1, V) at the window's last real token, new cache) —
-    meaningful on the final window of a prompt (they feed the first
-    sampled token).
+    Returns (logits (n, V) at each row's last real token, new cache) —
+    meaningful for rows on the final window of their prompt (they feed
+    the first sampled token).
     """
     offset, chunk_len = start, n_tokens
     if "block_tbl" not in cache:
         raise ValueError("prefill_tail requires a paged cache "
                          "(init_cache(..., num_blocks=...))")
     C = tokens.shape[1]
-    positions = offset + jnp.arange(C)
-    x = jnp.take(params["embed"]["w"], tokens, axis=0)      # (1, C, d)
+    positions = offset[:, None] + jnp.arange(C)[None]       # (n, C)
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)      # (n, C, d)
     if "pos_embed" in params:
         pe = params["pos_embed"]["w"]
         x = x + jnp.take(pe, jnp.minimum(positions, pe.shape[0] - 1),
-                         axis=0)[None]
+                         axis=0)
     rope = None
     if cfg.rope_theta:
         rope = rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
-    tbl_row = cache["block_tbl"][slot]
+    tbl = cache["block_tbl"][slot]                          # (n, T)
     if hist_blocks:
-        tbl_row = tbl_row[:hist_blocks]
+        tbl = tbl[:, :hist_blocks]
     new_segments = []
     for seg_p, seg_c, (kinds, rep) in zip(params["segments"],
                                           cache["segments"],
@@ -485,7 +491,7 @@ def prefill_tail(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
                 h = norm(xc, p["ln1"], cfg.norm_type, cfg.norm_eps)
                 a, new_sa = B.attn_chunk_prefill(
                     cfg, ctx, p["attn"], h, rope, layer_c[str(i)]["self"],
-                    tbl_row, slot, offset, chunk_len)
+                    tbl, slot, offset, chunk_len)
                 xc = xc + a
                 xc, _ = _ffn_tail(cfg, ctx, p, xc)
                 new_lc[str(i)] = {"self": new_sa}
@@ -494,11 +500,12 @@ def prefill_tail(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
         new_segments.append(new_c)
     x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
     x_last = jnp.take_along_axis(
-        x, jnp.maximum(chunk_len - 1, 0)[None, None, None], axis=1)
+        x, jnp.maximum(chunk_len - 1, 0)[:, None, None], axis=1)
     logits = head_logits(cfg, params, ctx, x_last)[:, 0]
     return logits, {
         "segments": new_segments,
-        "position": cache["position"].at[slot].set(offset + chunk_len),
+        "position": cache["position"].at[slot].set(offset + chunk_len,
+                                                   mode="drop"),
         "block_tbl": cache["block_tbl"]}
 
 

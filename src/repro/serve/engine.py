@@ -35,6 +35,14 @@ admission boundaries:
   ``kernels.kvq_attn.ops.copy_pool_blocks``). Shared-prompt workloads
   (system-prompted chat, few-shot eval, best-of-n) drop from O(prompt) to
   O(tail) prefill per request.
+* **Batched tail prefill** — up to ``tail_batch`` tail/chunked prefills
+  are in flight at once, and every engine step advances ALL of them by
+  one window in a single compiled tail-wave (per-row ``(c0, tail_len)``
+  offsets, pad-masked like the cold wave), so a burst of prefix-hit
+  arrivals no longer serializes one tail per step — warm TTFT under
+  concurrency matches the cold batched wave. ``prefix_affinity`` orders
+  the queue so requests sharing a cached chain admit back-to-back while
+  the chain is hot in the allocator's LRU.
 * **Preemption / swap-out** (``admission="optimistic"``) — instead of
   debiting a request's worst-case block count at admission, only its
   prompt footprint is allocated; when the pool later runs dry the engine
@@ -115,7 +123,9 @@ class ServeEngine:
                  table_len: Optional[int] = None,
                  prefix_cache: bool = True,
                  admission: str = "reserve",
-                 preempt: str = "last_admitted"):
+                 preempt: str = "last_admitted",
+                 tail_batch: int = 0,
+                 prefix_affinity: bool = True):
         self.cfg = cfg
         self.params = params
         self.ctx = make_ctx(policy)
@@ -164,7 +174,14 @@ class ServeEngine:
             if preempt not in PREEMPT_POLICIES:
                 raise ValueError(f"preempt must be one of "
                                  f"{PREEMPT_POLICIES}, got {preempt!r}")
+            # tail_batch caps how many tail/chunked prefills ride one
+            # batched wave; 0 = every slot, 1 = the serialized legacy path
+            if not 0 <= tail_batch <= slots:
+                raise ValueError(f"tail_batch must be in [0, slots={slots}]"
+                                 f", got {tail_batch}")
+            self.tail_batch = tail_batch or slots
         self.prefix_cache = prefix_cache and self._paged
+        self.prefix_affinity = prefix_affinity and self.prefix_cache
         self.admission = admission
         self.preempt = preempt
         auto_block = decode_block == "auto"
@@ -190,11 +207,18 @@ class ServeEngine:
             self._admit_paged_jit = jax.jit(
                 self._admit_batch_paged, static_argnums=(11,),
                 donate_argnums=(1,))
-            self._chunk_jit = jax.jit(
-                lambda params, cache, toks, slot, off, clen, hb:
+            # one compiled program advances a whole wave of tail/chunked
+            # prefills: per-row (slot, c0, tail_len), pad rows dropped
+            self._tail_jit = jax.jit(
+                lambda params, cache, toks, slots_, c0s, clens, hb:
                 prefill_tail(self.cfg, params, self.ctx, toks,
-                             cache, slot, off, clen, hist_blocks=hb),
+                             cache, slots_, c0s, clens, hist_blocks=hb),
                 static_argnums=(6,), donate_argnums=(1,))
+            # swap-in restore: one donated scatter for the whole payload
+            # (per-leaf .at[].set calls would each materialize a second
+            # pool — transient 2x cache HBM on every restore)
+            self._swap_in_jit = jax.jit(self._swap_in_scatter,
+                                        donate_argnums=(0,))
 
             def cow_copy(cache, src, dst):
                 def cp(path, leaf):
@@ -367,7 +391,7 @@ class ServeEngine:
         self._slot_req = {}
         self._written: Dict[int, int] = {}   # paged: tokens committed/slot
         self._tbl_dirty = False              # host table mirror vs device
-        self._chunk_job: Optional[Dict] = None   # in-progress chunked prefill
+        self._tail_jobs: List[Dict] = []     # in-progress tail prefills
         self._swapped: List[Dict] = []       # preempted, awaiting restore
         self._admit_seq: Dict[int, int] = {}     # slot -> admission order
         self._seq = 0
@@ -426,7 +450,7 @@ class ServeEngine:
         self.scheduler.submit(req)
 
     def _note_residency(self) -> None:
-        n = len(self._slot_req) + (self._chunk_job is not None)
+        n = len(self._slot_req) + len(self._tail_jobs)
         self._max_residents = max(self._max_residents, n)
 
     def _admit(self) -> None:
@@ -445,9 +469,32 @@ class ServeEngine:
 
     def _free_slots(self) -> List[int]:
         busy = set(self._slot_req)
-        if self._chunk_job is not None:
-            busy.add(self._chunk_job["slot"])
+        busy.update(j["slot"] for j in self._tail_jobs)
         return [s for s in range(self.slots) if s not in busy]
+
+    def _affinity_key(self, req):
+        """Grouping key for prefix-aware scheduling: requests whose
+        prompts extend the same cached chain share its block-id tuple, so
+        the scheduler pulls them back-to-back and the chain is admitted
+        while still hot in the allocator's LRU (a miss returns None — no
+        grouping). Ordering is a *hint*, so unlike admission (which needs
+        version-exact block ids) a stale key is acceptable: each request
+        pays one real lookup on first sight and then reuses its last
+        known key until some other path (head check, wave predicate)
+        re-looks it up for real — the index version bumps on every wave
+        window, and re-hashing the whole queue per engine step would put
+        O(queue x prompt) sha256 digests on the admission hot path."""
+        ver2 = (id(self), self._alloc_epoch)
+        memo = getattr(req, "_prefix_hit", None)
+        if memo is not None and memo[0] == ver2 + (
+                self.alloc.index_version,):
+            ids = memo[1][0]
+            return tuple(ids) if ids else None
+        hint = getattr(req, "_affinity_memo", None)
+        if hint is not None and hint[0] == ver2:
+            return hint[1]
+        ids = self._lookup(req)[0]
+        return tuple(ids) if ids else None
 
     def _admit_paged(self) -> None:
         """Paged admission loop. Swapped-out (preempted) requests restore
@@ -455,23 +502,34 @@ class ServeEngine:
         Each new request is first looked up in the prefix cache: a request
         with a cached prefix maps the hit blocks (refcount++) and admits
         through the tail-prefill path, computing only the uncached tail;
-        prompts longer than ``prefill_chunk`` take the same path chunk by
-        chunk. Everything else admits as a batched wave under the
-        free-block criterion with head-of-line blocking."""
+        prompts longer than ``prefill_chunk`` take the same path window by
+        window. Up to ``tail_batch`` tail admissions ride concurrently —
+        each engine step advances all of them in ONE compiled wave
+        (``_advance_tail_jobs``), so simultaneous prefix-hit arrivals no
+        longer serialize. With ``prefix_affinity`` the queue is grouped so
+        requests sharing a cached chain admit back-to-back. Everything
+        else admits as a batched cold wave under the free-block criterion
+        with head-of-line blocking."""
         if self._swapped:
             self._try_swap_in()
             if self._swapped:
                 return              # restore before admitting new work
+        gk = self._affinity_key if self.prefix_affinity else None
         while self.scheduler.pending:
             free = self._free_slots()
             if not free:
                 return
-            head = self.scheduler.first()
+            # chains with a tail admission in flight stay "hot": their
+            # queued sharers rank ahead so the chain's LRU blocks are
+            # mapped again before anything can evict them
+            hot = ({j["akey"] for j in self._tail_jobs
+                    if j.get("akey") is not None} if gk else ())
+            head = self.scheduler.first(group_key=gk, hot=hot)
             plen = len(head.prompt)
             hit_ids, cached, partial = self._lookup(head)
             if cached or plen > self.prefill_chunk:
-                if self._chunk_job is not None:
-                    return              # one tail/chunk admission at a time
+                if len(self._tail_jobs) >= self.tail_batch:
+                    return          # wave is full: head waits its turn
                 slot = free[0]
                 eff = self._paged_admit_slot(slot, head, hit_ids, partial,
                                              cached)
@@ -479,7 +537,9 @@ class ServeEngine:
                     return              # pool exhausted: head waits
                 self.scheduler.take(head)
                 self._host["prefix_hit_tokens"] += eff
-                self._chunk_job = {"req": head, "slot": slot, "c0": eff}
+                self._tail_jobs.append({"req": head, "slot": slot,
+                                        "c0": eff,
+                                        "akey": tuple(hit_ids) or None})
                 self._note_residency()
                 continue
             taken: List[int] = []
@@ -495,7 +555,8 @@ class ServeEngine:
                 taken.append(free[len(taken)])
                 return True
 
-            reqs = self.scheduler.select(len(free), admit_ok=ok)
+            reqs = self.scheduler.select(len(free), admit_ok=ok,
+                                         group_key=gk, hot=hot)
             if not reqs:
                 return
             # lazy prefill allocation: just the prompt's blocks for now
@@ -518,6 +579,9 @@ class ServeEngine:
             return memo[1]
         hit = self.alloc.lookup(req.prompt)
         req._prefix_hit = (ver, hit)
+        # refresh the affinity hint whenever a real lookup runs (see
+        # _affinity_key: grouping tolerates staleness, admission doesn't)
+        req._affinity_memo = (ver[:2], tuple(hit[0]) or None)
         return hit
 
     def _paged_admit_slot(self, slot: int, req, hit_ids, partial: bool,
@@ -540,7 +604,7 @@ class ServeEngine:
                 # the split-block COW can exceed the pool on tiny pools);
                 # when nothing is resident the pool will never get freer,
                 # so fall back to an unshared reservation over deadlock
-                idle = (not self._slot_req and self._chunk_job is None
+                idle = (not self._slot_req and not self._tail_jobs
                         and not self._swapped)
                 if not (idle and hit_ids and self.alloc.reserve(slot, need)):
                     return None
@@ -624,64 +688,97 @@ class ServeEngine:
                 # later requests sharing the prefix skip their prefill
                 self.alloc.register_prefix(s, r.prompt, len(r.prompt))
 
-    def _advance_chunk_job(self) -> None:
-        """Run ONE tail-prefill window of the in-progress chunked/shared
-        admission, appending cache blocks incrementally. ``c0`` starts at
-        the cached-prefix length (0 for a plain long prompt), so a
-        prefix-hit request computes only its uncached tail. One window per
-        engine step: resident slots keep decoding between windows, so a
-        long prompt can't freeze everyone else's inter-token latency. The
-        final window samples the first token and arms the slot exactly
-        like a batched admission."""
-        job = self._chunk_job
-        req, slot, c0 = job["req"], job["slot"], job["c0"]
-        C = self.prefill_chunk
-        plen = len(req.prompt)
+    def _advance_tail_jobs(self) -> None:
+        """Advance EVERY in-progress tail/chunked prefill by one window —
+        all jobs batched into a single compiled call (the tail-wave).
+        ``c0`` starts at the cached-prefix length (0 for a plain long
+        prompt), so a prefix-hit request computes only its uncached tail;
+        per-row ``(c0, tail_len)`` offsets let rows at different depths of
+        different prompts share the wave. One window per engine step:
+        resident slots keep decoding between windows, so long prompts
+        can't freeze everyone else's inter-token latency. Rows whose final
+        window completes sample their first token and arm their slots
+        together, exactly like a batched admission."""
         t0 = time.perf_counter()
-        cl = min(C, plen - c0)
-        if not self._ensure(slot, c0 + cl):
-            return                 # pool dry, the job itself got swapped out
-        if not self._cow_guard(slot, c0, c0 + cl):
-            return                 # ditto, while cloning the split block
+        C = self.prefill_chunk
+        ready: List[Dict] = []
+        lens: List[int] = []
+        for job in list(self._tail_jobs):
+            slot, c0 = job["slot"], job["c0"]
+            cl = min(C, len(job["req"].prompt) - c0)
+            # growth/COW may swap the job itself out on a dry pool
+            # (_preempt_for never victimizes tail jobs, so jobs in this
+            # loop can't evict each other)
+            if not self._ensure(slot, c0 + cl):
+                continue
+            if not self._cow_guard(slot, c0, c0 + cl):
+                continue
+            ready.append(job)
+            lens.append(cl)
+        if not ready:
+            return
         self._push_tables()
-        toks = np.zeros((1, C), np.int32)
-        toks[0, :cl] = req.prompt[c0:c0 + cl]
-        # table walk bounded by the tokens this chunk can touch, bucketed
-        # to a power of two to bound compile variants
-        hb = _pow2_ceil(self.alloc.blocks_for_tokens(c0 + C))
-        logits, self.state["cache"] = self._chunk_jit(
+        n = len(ready)
+        n_pad = min(_pow2_ceil(n), self.slots)
+        toks = np.zeros((n_pad, C), np.int32)
+        slots_arr = np.full((n_pad,), self.slots, np.int32)   # pad: dropped
+        c0s = np.zeros((n_pad,), np.int32)
+        clens = np.zeros((n_pad,), np.int32)
+        hb_need = 1
+        for i, (job, cl) in enumerate(zip(ready, lens)):
+            c0 = job["c0"]
+            toks[i, :cl] = job["req"].prompt[c0:c0 + cl]
+            slots_arr[i] = job["slot"]
+            c0s[i] = c0
+            clens[i] = cl
+            # table walk bounded by the tokens the deepest row can touch,
+            # bucketed to a power of two to bound compile variants
+            hb_need = max(hb_need, self.alloc.blocks_for_tokens(c0 + C))
+        hb = min(_pow2_ceil(hb_need), self.table_len)
+        logits, self.state["cache"] = self._tail_jit(
             self.params, self.state["cache"], jnp.asarray(toks),
-            jnp.int32(slot), jnp.int32(c0), jnp.int32(cl),
-            min(hb, self.table_len))
-        self._host["prefill_chunks"] += 1
-        self._host["prompt_tokens"] += cl
-        job["c0"] = c0 + cl
-        self.alloc.register_prefix(slot, req.prompt, job["c0"])
-        if job["c0"] < plen:                # more chunks to go
+            jnp.asarray(slots_arr), jnp.asarray(c0s), jnp.asarray(clens),
+            hb)
+        self._host["prefill_chunks"] += n
+        self._host["prompt_tokens"] += int(sum(lens))
+        done: List[Dict] = []
+        rows: List[int] = []
+        for i, (job, cl) in enumerate(zip(ready, lens)):
+            job["c0"] += cl
+            self.alloc.register_prefix(job["slot"], job["req"].prompt,
+                                       job["c0"])
+            if job["c0"] >= len(job["req"].prompt):
+                done.append(job)
+                rows.append(i)
+        if not done:
             jax.block_until_ready(self.state["cache"]["position"])
             self._host["prefill_s"] += time.perf_counter() - t0
             return
-        keys = jax.random.fold_in(jax.random.PRNGKey(req.seed),
-                                  req.uid)[None]
-        temp = jnp.asarray([req.temperature], jnp.float32)
-        top_k = jnp.asarray([req.top_k], jnp.int32)
+        reqs = [j["req"] for j in done]
+        keys = jnp.asarray(np.stack(
+            [jax.random.fold_in(jax.random.PRNGKey(r.seed), r.uid)
+             for r in reqs]))
+        temp = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+        top_k = jnp.asarray([r.top_k for r in reqs], jnp.int32)
         first = sample_tokens(
-            logits, fold_step(keys, jnp.zeros((1,), jnp.int32)), temp,
-            top_k, greedy_only=req.temperature <= 0.0)
+            logits[np.asarray(rows)],
+            fold_step(keys, jnp.zeros((len(done),), jnp.int32)), temp,
+            top_k, greedy_only=all(r.temperature <= 0.0 for r in reqs))
         self.state = self._post_prefill_state(
             self.state, self.state["cache"], first,
-            jnp.asarray([slot], jnp.int32),
-            jnp.asarray([req.eos_id], jnp.int32),
-            jnp.asarray([req.max_new_tokens], jnp.int32), temp, top_k,
-            keys)
+            jnp.asarray([j["slot"] for j in done], jnp.int32),
+            jnp.asarray([r.eos_id for r in reqs], jnp.int32),
+            jnp.asarray([r.max_new_tokens for r in reqs], jnp.int32),
+            temp, top_k, keys)
         jax.block_until_ready(self.state["tokens"])
         self._host["prefill_s"] += time.perf_counter() - t0
         self._host["prefill_calls"] += 1
-        self._host["prefill_tokens"] += 1
-        self.scheduler.on_admitted([req])
-        self._slot_req[slot] = req
-        self._written[slot] = plen
-        self._chunk_job = None
+        self._host["prefill_tokens"] += len(done)
+        self.scheduler.on_admitted(reqs)
+        for j in done:
+            self._tail_jobs.remove(j)
+            self._slot_req[j["slot"]] = j["req"]
+            self._written[j["slot"]] = len(j["req"].prompt)
 
     def _ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow the slot's block table to cover ``n_tokens``. Under
@@ -733,9 +830,10 @@ class ServeEngine:
 
     def _preempt_for(self, slot: int) -> bool:
         """Swap out one scheduler-chosen victim to free blocks. Candidates
-        are the decode residents other than ``slot`` (the active chunk job
-        is never in ``_slot_req``, so it is implicitly protected). False
-        when no other resident is preemptible."""
+        are the decode residents other than ``slot`` (in-progress tail
+        jobs are never in ``_slot_req``, so they are implicitly protected
+        — jobs in one wave can't evict each other). False when no other
+        resident is preemptible."""
         cands = []
         for s, r in self._slot_req.items():
             if s == slot:
@@ -797,20 +895,52 @@ class ServeEngine:
                     for layer in self._attn_layer_caches()]
         return jax.device_get(gathered)
 
+    def _swap_in_scatter(self, cache, payloads: List[Dict], idx, slot, w):
+        """One donated program for the whole swap-in restore: every
+        layer's payload scattered into its freshly allocated pool blocks
+        (``idx``; sentinel pads drop) plus the slot's per-layer lengths /
+        position rebuilt at ``w`` written tokens. Donating ``cache`` lets
+        XLA rewrite the pools in place — the per-leaf ``.at[].set`` path
+        this replaces materialized a second copy of every pool leaf."""
+        li = 0
+        segments = []
+        for seg in cache["segments"]:
+            new_seg = {}
+            for lk in sorted(seg, key=int):
+                sa = dict(seg[lk]["self"])
+                pay = payloads[li]
+                li += 1
+                for k in _POOL_KEYS:
+                    sa[k] = sa[k].at[:, idx].set(pay[k], mode="drop")
+                sa["length"] = sa["length"].at[:, slot].set(w)
+                new_seg[lk] = {"self": sa}
+            segments.append(new_seg)
+        return {"segments": segments,
+                "position": cache["position"].at[slot].set(w),
+                "block_tbl": cache["block_tbl"]}
+
     def _scatter_blocks(self, slot: int, ids, payload: List[Dict],
                         w: int) -> None:
-        """Restore swapped payloads into freshly allocated pool blocks and
-        rebuild the slot's per-layer lengths / position at ``w`` written
-        tokens."""
-        idx = jnp.asarray(np.asarray(ids, np.int32))
-        for layer, pay in zip(self._attn_layer_caches(), payload):
-            sa = layer["self"]
-            if len(ids):
-                for k in _POOL_KEYS:
-                    sa[k] = sa[k].at[:, idx].set(jnp.asarray(pay[k]))
-            sa["length"] = sa["length"].at[:, slot].set(w)
-        cache = self.state["cache"]
-        cache["position"] = cache["position"].at[slot].set(w)
+        """Restore swapped payloads into freshly allocated pool blocks via
+        the jitted donated scatter. The pad bucket (power of two) bounds
+        compile variants across restores of different block counts."""
+        m = len(ids)
+        m_pad = _pow2_ceil(max(m, 1))
+        idx = np.full((m_pad,), self.num_blocks, np.int32)   # pad: dropped
+        idx[:m] = ids
+        pad = m_pad - m
+
+        def padded(a):
+            if not pad:
+                return jnp.asarray(a)
+            widths = ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)
+            return jnp.asarray(np.pad(a, widths))
+
+        payloads = [{k: padded(pay[k]) for k in _POOL_KEYS}
+                    for pay in payload]
+        self.state["cache"] = self._swap_in_jit(
+            self.state["cache"], payloads, jnp.asarray(idx),
+            jnp.int32(slot), jnp.int32(w))
 
     def _swap_out(self, slot: int) -> None:
         """Preempt ``slot``: gather its quantized blocks into a host
@@ -820,9 +950,7 @@ class ServeEngine:
         in-progress chunk job (which resumes from its last finished
         window)."""
         t0 = time.perf_counter()
-        job = (self._chunk_job
-               if self._chunk_job is not None
-               and self._chunk_job["slot"] == slot else None)
+        job = next((j for j in self._tail_jobs if j["slot"] == slot), None)
         w = job["c0"] if job is not None else self._written[slot]
         # only blocks holding written tokens travel; lazily grown tail
         # blocks past ``w`` hold nothing and are re-allocated on restore
@@ -830,17 +958,27 @@ class ServeEngine:
         payload = self._gather_blocks(ids)
         nbytes = sum(a.nbytes for layer in payload for a in layer.values())
         if job is not None:
-            rec = {"req": job["req"], "kind": "prefill", "w": w}
-            self._chunk_job = None
+            # the affinity key rides along so a restored tail job keeps
+            # its chain "hot" for queued sharers
+            rec = {"req": job["req"], "kind": "prefill", "w": w,
+                   "akey": job.get("akey")}
+            self._tail_jobs.remove(job)
         else:
             req = self._slot_req.pop(slot)
             self._written.pop(slot)
-            n_gen, out_row, last = jax.device_get(
+            # the live sampling key travels with the record so restore
+            # resumes the slot's PRNG state verbatim. Today the key is
+            # constant per slot (steps derive their keys by folding n_gen
+            # into it), so rebuilding from fold_in(PRNGKey(seed), uid)
+            # happened to match — carrying it makes the invariant
+            # explicit instead of leaning on that coincidence, and any
+            # future key-advancing sampler keeps resume bit-exact.
+            n_gen, out_row, last, key = jax.device_get(
                 (self.state["n_gen"][slot], self.state["out"][slot],
-                 self.state["tokens"][slot, 0]))
+                 self.state["tokens"][slot, 0], self.state["keys"][slot]))
             rec = {"req": req, "kind": "decode", "w": w,
                    "n_gen": int(n_gen), "out": np.asarray(out_row),
-                   "last": int(last)}
+                   "last": int(last), "key": np.asarray(key)}
             self.state["active"] = self.state["active"].at[slot].set(False)
         rec["payload"] = payload
         rec["bytes"] = nbytes
@@ -853,29 +991,43 @@ class ServeEngine:
         self._host["swap_s"] += time.perf_counter() - t0
 
     def _try_swap_in(self) -> None:
-        """Restore swapped-out requests (FCFS) while slots and blocks
-        allow. The gate is the request's full remaining worst case — a
-        restore that could immediately become the next victim would
-        thrash swap bandwidth for no progress."""
+        """Restore swapped-out requests while slots and blocks allow.
+
+        Policy — strictly FCFS over the swap queue, head-of-line: a
+        later, smaller record is never restored ahead of the head even
+        when it would fit right now and free a slot sooner. The head was
+        already preempted once; letting smaller records jump the queue
+        could starve it indefinitely behind a stream of short work, so
+        fairness wins over pool utilization here (the cost is idle blocks
+        while the head's worst case doesn't fit). The per-record gate is
+        the request's full remaining worst case — a restore that could
+        immediately become the next victim would thrash swap bandwidth
+        for no progress.
+
+        Every stop condition below is terminal for this call, so the free
+        list is gathered once up front and popped as restores consume
+        slots instead of being rebuilt per iteration."""
+        free = self._free_slots()
         while self._swapped:
             rec = self._swapped[0]
             req = rec["req"]
-            if rec["kind"] == "prefill" and self._chunk_job is not None:
+            if rec["kind"] == "prefill" \
+                    and len(self._tail_jobs) >= self.tail_batch:
                 return
-            free = self._free_slots()
             if not free:
                 return
             need = len(req.prompt) + req.max_new_tokens - 1
             if self.alloc.blocks_for_tokens(need) > self.alloc.free_blocks:
-                return
-            self._restore(free[0], rec)
+                return              # head doesn't fit: nobody jumps it
+            self._restore(free.pop(0), rec)
             self._swapped.pop(0)
             self._note_residency()
 
     def _restore(self, slot: int, rec: Dict) -> None:
         """Swap a preempted request back in: fresh blocks, scattered
         payload, and the slot's sampling/output state rebuilt exactly as
-        it was — greedy decode resumes bit-identically."""
+        it was — greedy AND sampled decode resume bit-identically (the
+        record carries the slot's PRNG key verbatim; see ``_swap_out``)."""
         t0 = time.perf_counter()
         req, w = rec["req"], rec["w"]
         need = len(req.prompt) + req.max_new_tokens - 1
@@ -894,10 +1046,11 @@ class ServeEngine:
         self._admit_seq[slot] = self._seq
         self._seq += 1
         if rec["kind"] == "prefill":
-            self._chunk_job = {"req": req, "slot": slot, "c0": w}
+            self._tail_jobs.append({"req": req, "slot": slot, "c0": w,
+                                    "akey": rec.get("akey")})
         else:
             st = self.state
-            keys = jax.random.fold_in(jax.random.PRNGKey(req.seed), req.uid)
+            keys = jnp.asarray(rec["key"])
             st["tokens"] = st["tokens"].at[slot, 0].set(rec["last"])
             st["out"] = st["out"].at[slot].set(jnp.asarray(rec["out"]))
             st["n_gen"] = st["n_gen"].at[slot].set(rec["n_gen"])
@@ -919,12 +1072,17 @@ class ServeEngine:
         act, n_gen = jax.device_get((self.state["active"],
                                      self.state["n_gen"]))
         if self._paged:
-            # a slot still active after a chunk ran every one of its steps
+            # exact per-slot progress from the device counter: each decode
+            # step writes the KV of the token it consumes, so a slot holds
+            # prompt + (n_gen - 1) written tokens (the newest sampled token
+            # is not yet committed). Advancing by a flat ``decode_block``
+            # instead over-counts any slot that did not run the full chunk
+            # (armed by a tail wave or restored mid-window while others
+            # kept the loop alive) — and an over-counted ``_written`` makes
+            # a later swap-out gather unwritten tail blocks as payload.
             for s, r in self._slot_req.items():
                 if act[s]:
-                    cap = len(r.prompt) + r.max_new_tokens - 1
-                    self._written[s] = min(
-                        self._written[s] + self.decode_block, cap)
+                    self._written[s] = len(r.prompt) + int(n_gen[s]) - 1
         finished = [s for s in self._slot_req if not act[s]]
         if not finished:
             return
@@ -957,11 +1115,11 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def step(self) -> None:
-        """One admission + at most one prefill chunk of an in-progress
-        chunked admission + one on-device decode chunk + harvest."""
+        """One admission + one batched tail-wave window of the in-progress
+        tail/chunked admissions + one on-device decode chunk + harvest."""
         self._admit()
-        if self._chunk_job is not None:
-            self._advance_chunk_job()
+        if self._tail_jobs:
+            self._advance_tail_jobs()
         if self._slot_req:
             greedy_only = all(r.temperature <= 0.0
                               for r in self._slot_req.values())
@@ -995,7 +1153,7 @@ class ServeEngine:
         (``done`` stays False)."""
         chunks = 0
         while ((self.scheduler.pending or self._slot_req
-                or self._chunk_job is not None or self._swapped)
+                or self._tail_jobs or self._swapped)
                and chunks * self.decode_block < max_steps):
             self.step()
             chunks += 1

@@ -22,6 +22,9 @@ from typing import Dict, List, Optional
 
 POLICIES = ("fcfs", "sjf")
 PREEMPT_POLICIES = ("last_admitted", "longest_remaining")
+# how many non-head admissions may jump the policy head via hot-chain
+# affinity before grouping pauses and the head admits (starvation bound)
+HOT_BYPASS_CAP = 16
 
 
 @dataclass
@@ -61,6 +64,8 @@ class Scheduler:
         # scheduler keeps the full list for aggregate stats
         self._timings: List[RequestTiming] = []
         self._seq = 0                            # arrival tiebreaker
+        self._bypass_head = None     # policy head being jumped via hot
+        self._bypass_count = 0       # non-head removals while it waits
 
     # ---- queue ----
     def submit(self, req, now: Optional[float] = None) -> None:
@@ -75,23 +80,80 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
-    def _ordered(self) -> List:
+    def _ordered(self, group_key=None, hot=()) -> List:
         if self.policy == "sjf":
-            return sorted(self._queue,
+            base = sorted(self._queue,
                           key=lambda r: (len(r.prompt), r._arrival))
-        return list(self._queue)
+        else:
+            base = list(self._queue)
+        if group_key is None:
+            return base
+        # prefix-aware affinity: requests sharing a cached chain (equal
+        # non-None key) are pulled back-to-back behind the group's first
+        # occurrence, so the chain admits while it is still hot in the
+        # allocator's LRU. Keys in ``hot`` belong to chains with an
+        # admission already in flight — their sharers rank ahead of
+        # everything (the anchor that earned the group its position has
+        # left the queue, so rank-by-first-occurrence alone would let a
+        # stranger split the group). Keyless requests keep their policy
+        # position; cold groups never jump an earlier-ranked stranger.
+        # Hot jumping is starvation-bounded: once HOT_BYPASS_CAP non-head
+        # admissions have passed the same waiting policy head, grouping
+        # pauses until the head itself is taken (a steady sharer stream
+        # must not pin a stranger at the head forever).
+        if hot and self._bypass_head is base[0] \
+                and self._bypass_count >= HOT_BYPASS_CAP:
+            hot = ()
+        first_at: Dict = {}
+        ranked = []
+        for i, r in enumerate(base):
+            k = group_key(r)
+            if k is None:
+                ranked.append(((i, i), r))
+            elif k in hot:
+                ranked.append(((-1, i), r))
+            else:
+                first_at.setdefault(k, i)
+                ranked.append(((first_at[k], i), r))
+        ranked.sort(key=lambda t: t[0])
+        return [r for _, r in ranked]
 
-    def first(self):
+    def first(self, group_key=None, hot=()):
         """Policy-ordered head of the queue (None when empty). The paged
-        engine peeks it to route long prompts into chunked admission."""
-        return self._ordered()[0] if self._queue else None
+        engine peeks it to route prefix-hit / long prompts into tail
+        admission; ``group_key``/``hot`` apply the same prefix-affinity
+        grouping as ``select``."""
+        return self._ordered(group_key, hot)[0] if self._queue else None
+
+    def _policy_head(self):
+        """Ungrouped policy head (what pure FCFS/SJF would admit next)."""
+        if not self._queue:
+            return None
+        if self.policy == "sjf":
+            return min(self._queue,
+                       key=lambda r: (len(r.prompt), r._arrival))
+        return self._queue[0]
+
+    def _note_removal(self, req, head) -> None:
+        """Track admissions that bypass the waiting policy head (the
+        hot-chain starvation bound; see ``_ordered``)."""
+        if req is head or head is None:
+            self._bypass_head = None
+            self._bypass_count = 0
+        else:
+            if self._bypass_head is not head:
+                self._bypass_head = head
+                self._bypass_count = 0
+            self._bypass_count += 1
 
     def take(self, req) -> None:
         """Remove a specific queued request (paired with ``first``)."""
+        head = self._policy_head()
         self._queue.remove(req)
+        self._note_removal(req, head)
 
     def select(self, max_n: int, *, equal_length_only: bool = False,
-               admit_ok=None) -> List:
+               admit_ok=None, group_key=None, hot=()) -> List:
         """Pop up to ``max_n`` requests for one batched prefill.
 
         ``equal_length_only``: restrict the batch to the leader's exact
@@ -101,11 +163,14 @@ class Scheduler:
         head-of-line blocking, so a big request can't be starved by smaller
         ones arriving behind it. The predicate may commit resources
         (reservations) for requests it accepts: everything it accepted is
-        admitted.
+        admitted. ``group_key`` (callable req -> hashable | None) groups
+        requests with equal keys back-to-back, and ``hot`` keys (chains
+        with an admission in flight) rank first (prefix-affinity; see
+        ``_ordered``) before the scan.
         """
         if max_n <= 0 or not self._queue:
             return []
-        ordered = self._ordered()
+        ordered = self._ordered(group_key, hot)
         batch: List = []
         for r in ordered:
             if len(batch) >= max_n:
@@ -116,8 +181,13 @@ class Scheduler:
             if admit_ok is not None and not admit_ok(r):
                 break
             batch.append(r)
+        head = self._policy_head()
         for r in batch:
             self._queue.remove(r)
+        if batch:
+            # one bypass event per admission batch: either the head went
+            # (reset) or everything admitted jumped it (count once)
+            self._note_removal(head if head in batch else batch[0], head)
         return batch
 
     # ---- preemption ----

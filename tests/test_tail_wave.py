@@ -1,0 +1,279 @@
+"""Batched tail prefill (the tail-wave) + its satellite bugfixes.
+
+Covers: token parity of N simultaneous prefix-hit admissions against the
+serialized single-slot path (greedy and sampled, including a COW at the
+split block during the wave), concurrent long-prompt chunked prefills
+sharing one wave, prefix-affinity scheduling, the exact ``_written``
+accounting harvested from the device ``n_gen`` counter, the live-PRNG-key
+swap record (sampled preempt/resume parity), and the FCFS head-of-line
+swap-in policy under mixed record sizes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import HOT_BYPASS_CAP, Scheduler
+
+
+def _req(uid, prompt, **kw):
+    return Request(uid=uid, prompt=np.asarray(prompt, np.int32), **kw)
+
+
+@pytest.fixture(scope="module")
+def served(rng):
+    cfg = get_reduced_config("qwen2.5-3b")
+    return cfg, init_params(cfg, rng)
+
+
+def _shared_reqs(n=4, prefix_len=40, tail=5, max_new=6, **kw):
+    """One common prefix (2 full 16-token blocks + an 8-token split
+    block), n unique tails — every follower COWs the split block."""
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, 250, prefix_len).astype(np.int32)
+    return [_req(i, np.concatenate(
+                [prefix,
+                 ((np.arange(tail) * (i + 3) + i) % 250).astype(np.int32)]),
+                max_new_tokens=max_new, **kw)
+            for i in range(n)]
+
+
+class TestBatchedTailParity:
+    BS = 16
+
+    def _engine(self, served, tail_batch, **kw):
+        cfg, params = served
+        kw.setdefault("slots", 6)
+        kw.setdefault("cache_len", 64)
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("block_size", self.BS)
+        kw.setdefault("num_blocks", 48)
+        kw.setdefault("max_seq_len", 96)
+        return ServeEngine(cfg, params, tail_batch=tail_batch, **kw)
+
+    def _run(self, served, tail_batch, reqs):
+        """First request warms the prefix cache; the rest arrive as one
+        simultaneous burst of prefix hits."""
+        eng = self._engine(served, tail_batch)
+        eng.submit(reqs[0])
+        eng.run_until_drained()
+        for r in reqs[1:]:
+            eng.submit(r)
+        stats = eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        return [r.generated for r in reqs], stats
+
+    def test_burst_parity_greedy_with_cow_at_split_block(self, served):
+        """4 simultaneous prefix-hit tails ride ONE wave and produce the
+        exact tokens of the serialized one-tail-per-step path; each
+        follower's first window writes into the shared split block, so the
+        COW clones happen during the wave."""
+        g_wave, s_wave = self._run(served, 0, _shared_reqs())
+        g_ser, s_ser = self._run(served, 1, _shared_reqs())
+        assert g_wave == g_ser
+        # all three followers hit the cached chain and cloned the split
+        assert s_wave["prefix_hit_tokens"] == s_ser["prefix_hit_tokens"] > 0
+        assert s_wave["cow_copies"] >= 3 and s_ser["cow_copies"] >= 3
+        # the wave collapses the followers' admissions into one call
+        assert s_wave["prefill_calls"] < s_ser["prefill_calls"]
+
+    def test_burst_parity_sampled(self, served):
+        """Same burst with temperature + top-k sampling: per-request PRNG
+        streams are independent of wave packing."""
+        kw = dict(temperature=0.8, max_new=8)
+        reqs_w = _shared_reqs(**kw)
+        reqs_s = _shared_reqs(**kw)
+        for r in reqs_w + reqs_s:
+            r.top_k = 8
+            r.seed = 11
+        g_wave, _ = self._run(served, 0, reqs_w)
+        g_ser, _ = self._run(served, 1, reqs_s)
+        assert g_wave == g_ser
+
+    def test_two_long_prompts_share_one_wave(self, served):
+        """Chunked prefill is no longer one-prompt-at-a-time: two long
+        prompts advance window-by-window in the same wave and match the
+        serialized engine's tokens."""
+        def reqs():
+            return [_req(0, np.arange(40, dtype=np.int32) % 250,
+                         max_new_tokens=4),
+                    _req(1, (np.arange(36) * 3 % 250).astype(np.int32),
+                         max_new_tokens=4)]
+
+        def run(tail_batch):
+            eng = self._engine(served, tail_batch, prefill_chunk=16,
+                               prefix_cache=False, max_seq_len=128)
+            rs = reqs()
+            for r in rs:
+                eng.submit(r)
+            stats = eng.run_until_drained()
+            assert all(r.done for r in rs)
+            return [r.generated for r in rs], stats
+
+        g_wave, s_wave = run(0)
+        g_ser, s_ser = run(1)
+        assert g_wave == g_ser
+        # same windows computed either way, fewer engine steps batched
+        assert s_wave["prefill_chunks"] == s_ser["prefill_chunks"] == 6
+
+    def test_tail_batch_validation(self, served):
+        cfg, params = served
+        with pytest.raises(ValueError, match="tail_batch"):
+            ServeEngine(cfg, params, slots=2, cache_len=64,
+                        kv_layout="paged", tail_batch=3)
+
+
+class TestPrefixAffinity:
+    def test_group_key_orders_chain_sharers_back_to_back(self):
+        """Requests with equal non-None keys are pulled behind the
+        group's first occurrence; keyless requests keep their rank."""
+        s = Scheduler("fcfs")
+        reqs = [_req(i, np.arange(4) + i) for i in range(5)]
+        for r in reqs:
+            s.submit(r)
+        key = {0: "a", 1: None, 2: "b", 3: "a", 4: "b"}.get
+        ordered = s._ordered(group_key=lambda r: key(r.uid))
+        assert [r.uid for r in ordered] == [0, 3, 1, 2, 4]
+        # select pops in the grouped order, head-of-line stop intact
+        picked = s.select(3, group_key=lambda r: key(r.uid))
+        assert [r.uid for r in picked] == [0, 3, 1]
+
+    def test_hot_bypass_is_starvation_bounded(self):
+        """A steady stream of hot-chain sharers may jump the FCFS head
+        only HOT_BYPASS_CAP times; then grouping pauses and the head
+        orders first again (non-starvation)."""
+        s = Scheduler("fcfs")
+        stranger = _req(999, np.arange(4))
+        s.submit(stranger)
+        gk = (lambda r: "chain" if r.uid != 999 else None)
+        for i in range(HOT_BYPASS_CAP + 2):
+            sharer = _req(i, np.arange(4) + 100)
+            s.submit(sharer)
+            head = s.first(group_key=gk, hot={"chain"})
+            if i < HOT_BYPASS_CAP:
+                assert head is sharer          # hot jumps the stranger
+                s.take(sharer)
+            else:
+                assert head is stranger        # bound reached: head wins
+        s.take(stranger)                       # head admitted: bound resets
+        assert s.first(group_key=gk, hot={"chain"}).uid != 999
+
+    def test_engine_admits_chain_sharers_before_stranger(self, served):
+        """With affinity on, a late request extending the cached chain is
+        admitted in the same tail wave as an earlier sharer even though a
+        chain-less request sits between them in FCFS order."""
+        cfg, params = served
+        eng = ServeEngine(cfg, params, slots=2, cache_len=64,
+                          kv_layout="paged", block_size=16, num_blocks=32,
+                          max_seq_len=96)
+        warm = _shared_reqs(1)[0]
+        eng.submit(warm)
+        eng.run_until_drained()
+        sharers = _shared_reqs(3)[1:]       # uids 1, 2: extend the chain
+        stranger = _req(7, (np.arange(12) * 13 % 250).astype(np.int32),
+                        max_new_tokens=4)
+        eng.submit(sharers[0])
+        eng.submit(stranger)                # FCFS-between the two sharers
+        eng.submit(sharers[1])
+        eng.run_until_drained()
+        assert all(r.done for r in sharers + [stranger])
+        t = {r.uid: r._timing.admit_t for r in sharers + [stranger]}
+        assert max(t[1], t[2]) < t[7]       # sharers first, back-to-back
+
+
+class TestWrittenAccounting:
+    def test_written_tracks_device_n_gen_exactly(self, served):
+        """After every engine step, the host ``_written`` mirror of each
+        resident equals prompt + n_gen - 1 (the newest sampled token's KV
+        is not yet committed) — the invariant a swap-out relies on to
+        gather only written blocks."""
+        cfg, params = served
+        eng = ServeEngine(cfg, params, slots=4, cache_len=64,
+                          kv_layout="paged", block_size=8, num_blocks=32,
+                          max_seq_len=96, decode_block=4, prefill_chunk=16)
+        reqs = [_req(0, np.arange(6, dtype=np.int32), max_new_tokens=17),
+                _req(1, np.arange(30, dtype=np.int32) % 250,
+                     max_new_tokens=5),              # chunked: arms mid-run
+                _req(2, np.arange(9, dtype=np.int32) + 3,
+                     max_new_tokens=2)]              # finishes mid-chunk
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(40):
+            eng.step()
+            n_gen = jax.device_get(eng.state["n_gen"])
+            for s, r in eng._slot_req.items():
+                assert eng._written[s] == len(r.prompt) + int(n_gen[s]) - 1
+            if all(r.done for r in reqs):
+                break
+        assert all(r.done for r in reqs)
+
+
+class TestSampledPreemptResume:
+    def _mk(self, uid, plen, mn):
+        r = _req(uid, (np.arange(plen) * 7 + uid) % 250, max_new_tokens=mn)
+        r.temperature, r.top_k, r.seed = 0.7, 8, 5
+        return r
+
+    def test_sampled_swap_out_resumes_exact_tokens(self, served):
+        """Preempt/resume with temperature>0: the swap record carries the
+        live per-slot PRNG key, so the resumed stream equals an
+        uninterrupted solo run token-for-token."""
+        cfg, params = served
+        solo_req = self._mk(9, 10, 30)
+        solo = ServeEngine(cfg, params, slots=1, cache_len=64,
+                           kv_layout="paged", block_size=8, num_blocks=32,
+                           max_seq_len=96, decode_block=4)
+        solo.submit(solo_req)
+        solo.run_until_drained()
+        eng = ServeEngine(cfg, params, slots=4, cache_len=64,
+                          kv_layout="paged", block_size=8, num_blocks=8,
+                          max_seq_len=96, decode_block=4,
+                          admission="optimistic", prefix_cache=False)
+        reqs = [self._mk(0, 10, 30), self._mk(9, 10, 30),
+                self._mk(2, 10, 30)]
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run_until_drained(max_steps=50_000)
+        assert all(r.done for r in reqs)
+        assert stats["preemptions"] >= 1
+        assert reqs[1].generated == solo_req.generated
+        assert eng.alloc.allocated_blocks == 0
+
+
+class TestSwapInPolicy:
+    def test_fcfs_head_blocks_smaller_later_record(self, served):
+        """Documented head-of-line policy: when the swap-queue head's
+        worst case doesn't fit, a later smaller record that WOULD fit is
+        not restored ahead of it (no queue jumping), and nothing is
+        restored at all."""
+        cfg, params = served
+        eng = ServeEngine(cfg, params, slots=3, cache_len=64,
+                          kv_layout="paged", block_size=8, num_blocks=10,
+                          max_seq_len=96, decode_block=4,
+                          admission="optimistic", prefix_cache=False)
+        big = _req(0, np.arange(10, dtype=np.int32), max_new_tokens=60)
+        small = _req(1, np.arange(8, dtype=np.int32) + 50, max_new_tokens=8)
+        rival = _req(2, np.arange(8, dtype=np.int32) + 90,
+                     max_new_tokens=40)
+        for r in (big, small, rival):
+            eng.submit(r)
+        eng.step()                          # all three admitted
+        slots = {r.uid: s for s, r in eng._slot_req.items()}
+        assert set(slots) == {0, 1, 2}
+        eng._swap_out(slots[0])             # big first -> queue head
+        eng._swap_out(slots[1])             # small behind it
+        assert [rec["req"].uid for rec in eng._swapped] == [0, 1]
+        # rival keeps enough of the pool that big's worst case (9 blocks)
+        # can't fit, while small's (2 blocks) could
+        need_big = eng.alloc.blocks_for_tokens(10 + 60 - 1)
+        need_small = eng.alloc.blocks_for_tokens(8 + 8 - 1)
+        assert need_small <= eng.alloc.free_blocks < need_big
+        eng._try_swap_in()
+        assert [rec["req"].uid for rec in eng._swapped] == [0, 1]  # intact
+        assert len(eng._slot_req) == 1      # nothing restored
+        # once the pool recovers, FCFS order restores big before small
+        stats = eng.run_until_drained(max_steps=50_000)
+        assert big.done and small.done and rival.done
+        assert stats["swap_in_bytes"] == stats["swap_out_bytes"] > 0
