@@ -153,6 +153,96 @@ def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
     )(block_tbl, lengths, q, k_pool, v_pool, s_k, s_v)
 
 
+def _spec_verify_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, sk_ref,
+                        sv_ref, o_ref, m_ref, l_ref, acc_ref, *, bs: int,
+                        nt: int, scale: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)                # (C, D)
+    k = k_ref[0, 0].astype(jnp.float32) * sk_ref[0, 0][..., None]  # (bs, D)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # (C, bs)
+
+    # query row c of this slot sees cache positions < len[b, c] — the
+    # shared history plus the window prefix through itself, all already
+    # committed to the pool by the wave's scatter
+    pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0][:, None]                     # (C, bs)
+    scores = jnp.where(valid, scores, _NEG)
+
+    m_prev = m_ref[...]                                   # (C, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32) * sv_ref[0, 0][..., None]  # (bs, D)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (C, D)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _final():
+        o_ref[0, :, 0] = (acc_ref[...] /
+                          jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def kvq_spec_verify_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
+                         interpret: bool = True):
+    """Block-table flash attention for C verify queries per slot.
+
+    The speculative verify-wave's attention: the paged flash-decode walk
+    (grid (B, H, T), table as a scalar-prefetch operand) widened to a
+    (C, bs) score tile so ONE pass over each slot's block table serves
+    all ``C = k + 1`` window positions — instead of C separate decode
+    calls re-streaming the same int8 blocks from HBM. Per-query masking
+    comes from ``lengths`` (B, C) riding along as a VMEM operand.
+
+    q (B, C, H, D); pools (NB, Hkv, bs, D) int8; scales (NB, Hkv, bs)
+    fp32; block_tbl (B, T) int32 (sentinels clamped by the caller);
+    lengths (B, C) int32. Returns (B, C, H, D) in q.dtype.
+    """
+    B, C, H, D = q.shape
+    Hkv, bs = k_pool.shape[1], k_pool.shape[2]
+    T = block_tbl.shape[1]
+    group = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    kv_ix = lambda b, h, t, tbl: (tbl[b, t], h // group, 0, 0)
+    sc_ix = lambda b, h, t, tbl: (tbl[b, t], h // group, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                           # block_tbl
+        grid=(B, H, T),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda b, h, t, tbl: (b, 0)),   # lengths
+            pl.BlockSpec((1, C, 1, D), lambda b, h, t, tbl: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, bs, D), kv_ix),          # k pool
+            pl.BlockSpec((1, 1, bs, D), kv_ix),          # v pool
+            pl.BlockSpec((1, 1, bs), sc_ix),             # s_k pool
+            pl.BlockSpec((1, 1, bs), sc_ix),             # s_v pool
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, D),
+                               lambda b, h, t, tbl: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, 1), jnp.float32),   # running max
+            pltpu.VMEM((C, 1), jnp.float32),   # running denom
+            pltpu.VMEM((C, D), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_spec_verify_kernel, bs=bs, nt=T, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tbl, lengths, q, k_pool, v_pool, s_k, s_v)
+
+
 def _copy_kernel(src_ref, dst_ref, x_ref, o_ref):
     o_ref[...] = x_ref[...]
 

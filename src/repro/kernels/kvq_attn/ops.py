@@ -10,6 +10,7 @@ from repro.kernels.kvq_attn import kernel as K
 from repro.kernels.kvq_attn.ref import (chunk_commit_ids, copy_pool_blocks_ref,
                                         kvq_decode_attn_ref,
                                         kvq_paged_decode_attn_ref,
+                                        kvq_spec_verify_attn_ref,
                                         scatter_chunk_kv)
 
 _INTERPRET = jax.default_backend() != "tpu"
@@ -97,6 +98,29 @@ def kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths,
     return K.kvq_decode_attn(q, k_q, v_q, s_k.astype(jnp.float32),
                              s_v.astype(jnp.float32),
                              lengths.astype(jnp.int32), interpret=_INTERPRET)
+
+
+def kvq_spec_verify_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
+                         use_pallas: bool = True) -> jnp.ndarray:
+    """Multi-query block-table attention for the speculative verify-wave.
+
+    q (B, C, H, D): the wave's C window queries per slot (their K/V are
+    already committed to the pool); block_tbl (B, T) int32 (sentinels
+    clamped here); lengths (B, C) per-query valid extents. On TPU the
+    widened Pallas kernel serves all C queries in one table walk;
+    elsewhere the gather + per-position decode oracle runs (bitwise
+    identical to C sequential decode steps).
+    """
+    if not use_pallas:
+        return kvq_spec_verify_attn_ref(q, k_pool, v_pool, s_k, s_v,
+                                        block_tbl, lengths)
+    nb = k_pool.shape[0]
+    tbl = jnp.minimum(block_tbl.astype(jnp.int32), nb - 1)
+    return K.kvq_spec_verify_attn(q, k_pool, v_pool,
+                                  s_k.astype(jnp.float32),
+                                  s_v.astype(jnp.float32), tbl,
+                                  lengths.astype(jnp.int32),
+                                  interpret=_INTERPRET)
 
 
 def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,

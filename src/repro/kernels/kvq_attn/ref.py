@@ -102,6 +102,43 @@ def scatter_chunk_kv(pool: jnp.ndarray, vals: jnp.ndarray,
     return pool.at[blk, :, off].set(vals, mode="drop")
 
 
+def kvq_spec_verify_attn_ref(q, k_pool, v_pool, s_k, s_v, block_tbl,
+                             lengths):
+    """Multi-query decode attention for the speculative verify-wave.
+
+    q (B, C, H, D): C window queries per slot, all of whose K/V are
+    already *committed to the pool* (quantized) before this runs;
+    lengths (B, C): query j of slot b attends to cache positions
+    ``< lengths[b, j]`` (= history + window prefix through itself).
+    Gathers each slot's blocks once and runs the decode oracle's exact
+    formula with one extra query axis — per (b, c) row the masked
+    softmax/reduce over S is the row-independent computation a
+    sequential ``decode_step`` performs, so the committed stream is
+    bitwise identical to plain decode (while the batched einsums keep
+    the op count C-independent). Returns (B, C, H, D).
+    """
+    B, C, H, D = q.shape
+    k = gather_paged_kv(k_pool, block_tbl)
+    v = gather_paged_kv(v_pool, block_tbl)
+    sk = gather_paged_kv(s_k, block_tbl)
+    sv = gather_paged_kv(s_v, block_tbl)
+    Hkv, S = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, C, Hkv, group, D)
+    kf = k.astype(jnp.float32) * sk[..., None].astype(jnp.float32)
+    vf = v.astype(jnp.float32) * sv[..., None].astype(jnp.float32)
+    scores = jnp.einsum("bcngd,bnsd->bcngs", qf, kf) \
+        / jnp.sqrt(jnp.float32(D))
+    mask = (jnp.arange(S)[None, None]
+            < lengths[:, :, None])[:, :, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p * mask
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bcngs,bnsd->bcngd", p, vf)
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
 def kvq_paged_decode_attn_ref(q, k_pool, v_pool, s_k, s_v, block_tbl,
                               lengths):
     """Block-table decode attention oracle: gather, then dense ref.

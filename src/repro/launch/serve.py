@@ -82,6 +82,23 @@ def main():
                     choices=("last_admitted", "longest_remaining"),
                     help="victim policy for optimistic-admission "
                          "preemption")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="disable speculative decoding (paged layout "
+                         "enables it by default: a truncated-layer draft "
+                         "proposes k tokens per slot and the target "
+                         "verifies every resident's drafts in one "
+                         "compiled wave, rolling rejected suffixes back)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per slot per verify-wave")
+    ap.add_argument("--spec-draft", type=int, default=0,
+                    help="draft depth in layers (0 = half the target's "
+                         "layers; equal to n_layers = self-draft)")
+    ap.add_argument("--spec-accept", default="exact",
+                    choices=("exact", "rejection"),
+                    help="acceptance rule: 'exact' commits the target's "
+                         "own samples (output identical to plain decode); "
+                         "'rejection' runs speculative rejection sampling "
+                         "for temperature/top-k requests")
     ap.add_argument("--sched", default="fcfs", choices=("fcfs", "sjf"))
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -102,6 +119,11 @@ def main():
               "admission": args.admission, "preempt": args.preempt,
               "tail_batch": args.tail_batch,
               "prefix_affinity": not args.no_prefix_affinity}
+        if not args.no_spec:
+            from repro.serve.spec import SpecConfig
+            kw["spec"] = SpecConfig(k=args.spec_k,
+                                    draft_layers=args.spec_draft or None,
+                                    accept_mode=args.spec_accept)
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
                          cache_len=args.cache_len,
                          decode_block=decode_block,
@@ -127,6 +149,14 @@ def main():
               f"{stats['preemptions']} swaps, "
               f"{stats['swap_out_bytes'] + stats['swap_in_bytes']} bytes "
               f"moved in {stats['swap_s'] * 1e3:.0f} ms")
+        if "spec_waves" in stats:
+            print(f"speculative: {stats['spec_waves']} waves, "
+                  f"{stats['spec_drafted']} drafted / "
+                  f"{stats['spec_accepted']} accepted / "
+                  f"{stats['spec_rolled_back']} rolled back "
+                  f"(accept rate {stats['spec_accept_rate']:.2f}, "
+                  f"k={stats['spec_k']}, "
+                  f"draft {stats['spec_draft_layers']} layers)")
     if args.bench_out:
         with open(args.bench_out, "w") as f:
             json.dump({"args": vars(args), "stats": stats}, f, indent=2)

@@ -1,7 +1,8 @@
 """Pure-JAX functional model zoo with SiLQ quantization sites."""
 from repro.models.model import (decode_step, forward, head_logits, init_cache,
                                 init_params, prefill, prefill_tail,
-                                segment_plan)
+                                segment_plan, spec_verify)
 
 __all__ = ["decode_step", "forward", "head_logits", "init_cache",
-           "init_params", "prefill", "prefill_tail", "segment_plan"]
+           "init_params", "prefill", "prefill_tail", "segment_plan",
+           "spec_verify"]

@@ -62,6 +62,24 @@ def _decode_attn_paged(q, k_pool, v_pool, s_k, s_v, block_tbl,
         gather_paged_kv(s_v, block_tbl), lengths)
 
 
+def _spec_verify_attn(q, k_pool, v_pool, s_k, s_v, block_tbl,
+                      lengths) -> jnp.ndarray:
+    """Multi-query decode attention for the speculative verify-wave.
+
+    q (n, C, H, D): C window queries per slot whose quantized K/V are
+    already committed to the pool; lengths (n, C): query j reads cache
+    positions ``< lengths[n, j]``. On TPU one widened Pallas kernel
+    serves all C queries per block-table walk; elsewhere the gather +
+    per-position decode oracle runs — each position computes exactly the
+    ops a sequential ``decode_step`` would, so the verified stream is
+    bitwise identical to plain decode.
+    """
+    from repro.kernels.kvq_attn.ops import kvq_spec_verify_attn
+    return kvq_spec_verify_attn(q, k_pool, v_pool, s_k, s_v, block_tbl,
+                                lengths,
+                                use_pallas=jax.default_backend() == "tpu")
+
+
 # ==========================================================================
 # Dense MLPs
 # ==========================================================================
@@ -556,4 +574,46 @@ def attn_chunk_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict,
                           chunk_len)
     new["length"] = cache["length"].at[slot].set(offset + chunk_len,
                                                  mode="drop")
+    return y, new
+
+
+def attn_spec_verify(cfg: ModelConfig, ctx: QuantCtx, p: Dict,
+                     x: jnp.ndarray, rope, cache: Dict,
+                     tbl: jnp.ndarray, slot: jnp.ndarray,
+                     offset: jnp.ndarray, chunk_len: jnp.ndarray):
+    """One attention layer of the speculative *verify-wave*.
+
+    Same per-row ``(offset, chunk_len)`` batched-window contract as
+    :func:`attn_chunk_prefill` — x (n, C, d) holds one slot's window
+    ``[last_token, draft_1..draft_k]`` per row, committed through the
+    block table with per-row write offsets (``commit_chunk_kv``) — but
+    the attention *numerics are plain decode's, not prefill's*: the
+    window K/V are committed to the pool FIRST (quantized) and every
+    window position then reads the pool back dequantized, exactly as the
+    ``k + 1`` sequential decode steps it replaces would. Window position
+    j attends to ``offset + j + 1`` tokens (history + window through
+    itself); positions at or beyond ``chunk_len`` commit nothing (their
+    reads are garbage and the engine's acceptance mask discards them).
+    Rejected-suffix commits are *rolled back by the caller* (device
+    length/position reset + ``BlockAllocator.trim``); the engine must
+    have grown the table to ``offset + chunk_len`` tokens and resolved
+    copy-on-write for the write range before calling, like any chunk.
+
+    Returns (y (n, C, d), new cache) with ``length`` advanced to the
+    full ``offset + chunk_len`` (the engine re-clamps it to the accepted
+    extent after acceptance).
+    """
+    from repro.kernels.kvq_attn.ops import commit_chunk_kv
+    B, C, _ = x.shape
+    q, k, v = _qkv(cfg, ctx, p, x, x, rope, None)
+    k_q1, v_q1, s_k1, s_v1 = quantize_kv_for_cache(ctx, p, k, v)
+    new = commit_chunk_kv(cache, k_q1, v_q1, s_k1, s_v1, tbl, offset,
+                          chunk_len)
+    new["length"] = cache["length"].at[slot].set(offset + chunk_len,
+                                                 mode="drop")
+    # per-query valid extent: history + the window prefix through itself
+    lens = offset[:, None] + 1 + jnp.arange(C)[None]
+    out = _spec_verify_attn(q, new["k_q"], new["v_q"], new["s_k"],
+                            new["s_v"], tbl, lens)
+    y = qlinear(ctx, out.reshape(B, C, cfg.q_dim).astype(x.dtype), p["wo"])
     return y, new

@@ -422,6 +422,66 @@ def decode_step(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
     return logits, new_cache
 
 
+def _tail_prologue(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                   cache: Dict, slot: jnp.ndarray, offset: jnp.ndarray,
+                   hist_blocks: int, caller: str):
+    """Shared entry of the batched-window paths (``prefill_tail`` and the
+    speculative ``spec_verify``): embed one window per row at per-row
+    absolute offsets, build per-position RoPE tables, and pull each
+    row's (optionally ``hist_blocks``-truncated) block table."""
+    if "block_tbl" not in cache:
+        raise ValueError(f"{caller} requires a paged cache "
+                         "(init_cache(..., num_blocks=...))")
+    C = tokens.shape[1]
+    positions = offset[:, None] + jnp.arange(C)[None]       # (n, C)
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)      # (n, C, d)
+    if "pos_embed" in params:
+        pe = params["pos_embed"]["w"]
+        x = x + jnp.take(pe, jnp.minimum(positions, pe.shape[0] - 1),
+                         axis=0)
+    rope = None
+    if cfg.rope_theta:
+        rope = rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    tbl = cache["block_tbl"][slot]                          # (n, T)
+    if hist_blocks:
+        tbl = tbl[:, :hist_blocks]
+    return x, rope, tbl
+
+
+def _tail_stack(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
+                x: jnp.ndarray, rope, cache: Dict, tbl: jnp.ndarray,
+                slot: jnp.ndarray, offset: jnp.ndarray,
+                chunk_len: jnp.ndarray, attn_fn):
+    """Scan the decoder stack over one batched window, committing every
+    layer's K/V through the block table. ``attn_fn`` is the per-layer
+    attention: ``blocks.attn_chunk_prefill`` for tail/chunked prefill
+    (exact bf16 window K/V) or ``blocks.attn_spec_verify`` for the
+    speculative verify-wave (decode-exact quantized reads) — both share
+    this loop so the batched-window contract can't diverge between the
+    two paths. Returns (final-norm'd x, new cache segments)."""
+    new_segments = []
+    for seg_p, seg_c, (kinds, rep) in zip(params["segments"],
+                                          cache["segments"],
+                                          segment_plan(cfg)):
+        def body(xc, inp):
+            layer_p, layer_c = inp
+            new_lc = {}
+            for i, kind in enumerate(kinds):
+                p = layer_p[str(i)]
+                h = norm(xc, p["ln1"], cfg.norm_type, cfg.norm_eps)
+                a, new_sa = attn_fn(cfg, ctx, p["attn"], h, rope,
+                                    layer_c[str(i)]["self"], tbl, slot,
+                                    offset, chunk_len)
+                xc = xc + a
+                xc, _ = _ffn_tail(cfg, ctx, p, xc)
+                new_lc[str(i)] = {"self": new_sa}
+            return xc, new_lc
+        x, new_c = jax.lax.scan(body, x, (seg_p, seg_c))
+        new_segments.append(new_c)
+    return norm(x, params["final_norm"], cfg.norm_type,
+                cfg.norm_eps), new_segments
+
+
 def prefill_tail(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
                  tokens: jnp.ndarray, cache: Dict, slot: jnp.ndarray,
                  start: jnp.ndarray, n_tokens: jnp.ndarray,
@@ -463,45 +523,55 @@ def prefill_tail(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
     the first sampled token).
     """
     offset, chunk_len = start, n_tokens
-    if "block_tbl" not in cache:
-        raise ValueError("prefill_tail requires a paged cache "
-                         "(init_cache(..., num_blocks=...))")
-    C = tokens.shape[1]
-    positions = offset[:, None] + jnp.arange(C)[None]       # (n, C)
-    x = jnp.take(params["embed"]["w"], tokens, axis=0)      # (n, C, d)
-    if "pos_embed" in params:
-        pe = params["pos_embed"]["w"]
-        x = x + jnp.take(pe, jnp.minimum(positions, pe.shape[0] - 1),
-                         axis=0)
-    rope = None
-    if cfg.rope_theta:
-        rope = rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
-    tbl = cache["block_tbl"][slot]                          # (n, T)
-    if hist_blocks:
-        tbl = tbl[:, :hist_blocks]
-    new_segments = []
-    for seg_p, seg_c, (kinds, rep) in zip(params["segments"],
-                                          cache["segments"],
-                                          segment_plan(cfg)):
-        def body(xc, inp):
-            layer_p, layer_c = inp
-            new_lc = {}
-            for i, kind in enumerate(kinds):
-                p = layer_p[str(i)]
-                h = norm(xc, p["ln1"], cfg.norm_type, cfg.norm_eps)
-                a, new_sa = B.attn_chunk_prefill(
-                    cfg, ctx, p["attn"], h, rope, layer_c[str(i)]["self"],
-                    tbl, slot, offset, chunk_len)
-                xc = xc + a
-                xc, _ = _ffn_tail(cfg, ctx, p, xc)
-                new_lc[str(i)] = {"self": new_sa}
-            return xc, new_lc
-        x, new_c = jax.lax.scan(body, x, (seg_p, seg_c))
-        new_segments.append(new_c)
-    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    x, rope, tbl = _tail_prologue(cfg, params, tokens, cache, slot, offset,
+                                  hist_blocks, caller="prefill_tail")
+    x, new_segments = _tail_stack(cfg, params, ctx, x, rope, cache, tbl,
+                                  slot, offset, chunk_len,
+                                  B.attn_chunk_prefill)
     x_last = jnp.take_along_axis(
         x, jnp.maximum(chunk_len - 1, 0)[:, None, None], axis=1)
     logits = head_logits(cfg, params, ctx, x_last)[:, 0]
+    return logits, {
+        "segments": new_segments,
+        "position": cache["position"].at[slot].set(offset + chunk_len,
+                                                   mode="drop"),
+        "block_tbl": cache["block_tbl"]}
+
+
+def spec_verify(cfg: ModelConfig, params: Dict, ctx: QuantCtx,
+                tokens: jnp.ndarray, cache: Dict, slot: jnp.ndarray,
+                start: jnp.ndarray, n_tokens: jnp.ndarray,
+                hist_blocks: int = 0):
+    """Speculative-decode verify pass: target logits at EVERY window
+    position of a batch of slots, in one compiled call.
+
+    Same per-row ``(start, n_tokens)`` batched-window contract as
+    :func:`prefill_tail` — ``tokens`` (n, C) holds row i's window
+    ``[last_committed_token, draft_1..draft_k]`` starting at absolute
+    position ``start[i]``, padded rows carry ``n_tokens == 0`` and the
+    slot sentinel — but where a chunked prefill attends with exact bf16
+    window K/V, the verify pass commits the window's *quantized* K/V to
+    the pool first and reads them back dequantized
+    (``blocks.attn_spec_verify``), reproducing sequential decode-step
+    numerics bit-for-bit: logits at window position j equal what
+    ``decode_step`` would produce after consuming the window prefix
+    through j. The caller samples/accepts against these logits and rolls
+    the committed suffix back (device counters + allocator ``trim``) for
+    the rejected positions.
+
+    ``hist_blocks`` bounds the per-row table walk like in
+    ``prefill_tail`` (must cover every row's ``start + n_tokens``).
+    Returns (logits (n, C, V), new cache) — the cache's ``length`` /
+    ``position`` are advanced to the full window extent; the engine
+    re-clamps them to the accepted extent after acceptance.
+    """
+    offset, chunk_len = start, n_tokens
+    x, rope, tbl = _tail_prologue(cfg, params, tokens, cache, slot, offset,
+                                  hist_blocks, caller="spec_verify")
+    x, new_segments = _tail_stack(cfg, params, ctx, x, rope, cache, tbl,
+                                  slot, offset, chunk_len,
+                                  B.attn_spec_verify)
+    logits = head_logits(cfg, params, ctx, x)
     return logits, {
         "segments": new_segments,
         "position": cache["position"].at[slot].set(offset + chunk_len,

@@ -382,6 +382,96 @@ class BlockAllocator:
             self.peak_blocks = max(self.peak_blocks, self.allocated_blocks)
         return pairs
 
+    def _return_block(self, b: int) -> None:
+        """Send a refcount-zero block back to the pool: the evictable LRU
+        when the prefix index still addresses it, else the free list."""
+        if b in self._meta:
+            self._lru[b] = None           # most-recently released
+        else:
+            self._free.append(b)
+
+    def trim(self, slot: int, n_tokens: int) -> int:
+        """Shrink the slot's mapping to its first ``n_tokens`` tokens —
+        the speculative-decode *rollback* primitive: the verify-wave
+        writes ``k + 1`` candidate tokens' KV through the table, and the
+        rejected suffix's whole blocks are released here.
+
+        Per-block semantics match ``release``: refcounts drop, blocks
+        other slots still map survive for them, blocks the prefix index
+        addresses park on the evictable LRU (their content stays
+        resurrectable), and ownership dies with the trim. Blocks this
+        slot obtained fresh under a ``reserve`` discipline credit the
+        reservation back when they return to the obtainable pool, so a
+        rolled-back slot can regrow without outgrowing its debit.
+
+        The kept boundary block is repaired against the index: when this
+        slot owns it (and may therefore rewrite it in place without a
+        COW), index entries addressing content beyond the retained
+        in-block extent are dropped (full) or truncated (partial) — a
+        later in-place write must not silently invalidate what the index
+        promises readers. Returns the number of blocks released.
+        """
+        owned = self._owned.get(slot)
+        if owned is None:
+            raise ValueError(f"slot {slot} is not admitted")
+        keep = self.blocks_for_tokens(n_tokens)
+        # boundary repair applies only when the trim actually cuts into
+        # owned content (a trim past the owned extent is a no-op)
+        boundary = owned[keep - 1] if 0 < keep <= len(owned) else None
+        cut = owned[keep:]
+        for b in cut:
+            self._ref[b] -= 1
+            if self._ref[b] < 0:
+                raise RuntimeError(f"block {b} refcount went negative — "
+                                   f"double trim/release")
+            was_owner = self._owner.get(b) == slot
+            if was_owner:
+                del self._owner[b]
+            if self._ref[b] == 0:
+                # obtainable again: blocks this slot debited fresh go
+                # back into its reservation budget (physical and
+                # promised capacity move together, so the free_blocks
+                # guarantee is preserved)
+                if was_owner and slot in self._reserved:
+                    self._reserved[slot] += 1
+                self._return_block(b)
+        del owned[keep:]
+        self.tables[slot, keep:] = self.num_blocks
+        if boundary is not None and self._owner.get(boundary) == slot:
+            self._repair_boundary(boundary,
+                                  n_tokens - (keep - 1) * self.block_size)
+        return len(cut)
+
+    def _repair_boundary(self, blk: int, off: int) -> None:
+        """Drop/truncate index entries of ``blk`` addressing content past
+        the retained ``off`` tokens. Only reached when the trimming slot
+        owns the block — owners append in place without COW, so stale
+        entries would otherwise promise readers content about to be
+        overwritten."""
+        ents = self._meta.get(blk)
+        if not ents or off >= self.block_size:
+            return
+        kept = []
+        for kind, key in ents:
+            if kind == "full":
+                del self._index[key]
+                self.index_version += 1
+                continue
+            b, toks = self._partial[key]
+            if len(toks) > off:
+                if off > 0:
+                    self._partial[key] = (b, np.array(toks[:off], np.int32))
+                    kept.append((kind, key))
+                else:
+                    del self._partial[key]
+                self.index_version += 1
+            else:
+                kept.append((kind, key))
+        if kept:
+            self._meta[blk] = kept
+        else:
+            del self._meta[blk]
+
     def release(self, slot: int) -> int:
         """Unmap the slot's blocks and drop its remaining reservation.
         Blocks whose refcount hits zero return to the pool — to the free
@@ -403,10 +493,7 @@ class BlockAllocator:
                 del self._owner[b]
             if self._ref[b] == 0:
                 n_zero += 1
-                if b in self._meta:
-                    self._lru[b] = None       # most-recently released
-                else:
-                    self._free.append(b)
+                self._return_block(b)
         self.tables[slot, :] = self.num_blocks
         return n_zero
 

@@ -74,10 +74,14 @@ import numpy as np
 from repro.configs.base import ATTENTION_BLOCKS, BLOCK_ATTN, ModelConfig
 from repro.core.qat import make_ctx
 from repro.kernels.kvq_attn.ops import copy_pool_blocks
-from repro.models import decode_step, init_cache, prefill, prefill_tail
+from repro.models import (decode_step, init_cache, prefill, prefill_tail,
+                          spec_verify)
 from repro.serve.block_alloc import BlockAllocator, PoolDry
-from repro.serve.sampling import TOP_K_CAP, fold_step, sample_tokens
+from repro.serve.sampling import (TOP_K_CAP, fold_step, sample_tokens,
+                                  token_probs)
 from repro.serve.scheduler import PREEMPT_POLICIES, Scheduler
+from repro.serve.spec import (SpecConfig, accept_exact, accept_rejection,
+                              make_draft)
 
 _POOL_KEYS = ("k_q", "v_q", "s_k", "s_v")   # pool-shaped paged cache leaves
 
@@ -89,6 +93,18 @@ def _pow2_ceil(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def _clamp_lengths(segments, lens):
+    """Re-clamp every attention layer's per-slot ``length`` leaf to
+    ``lens`` — the device half of speculative rollback (the draft cache
+    before drafting, the target cache after acceptance)."""
+    def clamp(path, leaf):
+        if getattr(path[-1], "key", None) == "length":
+            return jnp.broadcast_to(lens[None], leaf.shape)
+        return leaf
+    return [jax.tree_util.tree_map_with_path(clamp, seg)
+            for seg in segments]
 
 
 # decode_block="auto" probe results, memoized per process so benchmark
@@ -125,7 +141,8 @@ class ServeEngine:
                  admission: str = "reserve",
                  preempt: str = "last_admitted",
                  tail_batch: int = 0,
-                 prefix_affinity: bool = True):
+                 prefix_affinity: bool = True,
+                 spec: Optional[SpecConfig] = None):
         self.cfg = cfg
         self.params = params
         self.ctx = make_ctx(policy)
@@ -184,14 +201,38 @@ class ServeEngine:
         self.prefix_affinity = prefix_affinity and self.prefix_cache
         self.admission = admission
         self.preempt = preempt
+        self.spec = None
+        if spec is not None:
+            if not self._paged:
+                raise ValueError("speculative decoding requires "
+                                 "kv_layout='paged' (the rollback path is "
+                                 "the paged allocator's trim)")
+            self.spec = spec if isinstance(spec, SpecConfig) \
+                else SpecConfig(**spec)
+            self.draft_cfg, self.draft_params = make_draft(cfg, params,
+                                                           self.spec)
+            self.draft_ctx = make_ctx(self.spec.draft_policy or policy)
+            # the draft over-commits up to k positions past the accepted
+            # extent before rollback; its dense ring must never wrap
+            # into live history
+            self._draft_cache_len = self.max_seq_len + self.spec.k + 1
         auto_block = decode_block == "auto"
         self.decode_block = 8 if auto_block else int(decode_block)
+        self._decode_block_mode = "auto" if auto_block else "fixed"
+        if self.spec is not None:
+            # the spec loop owns step granularity: one draft+verify wave
+            # per engine step commits up to k+1 tokens per slot, so the
+            # decode-chunk latency probe is meaningless (and never run)
+            self.decode_block = self.spec.k + 1
+            self._decode_block_mode = "spec"
         self.reset()
-        if auto_block:
+        if auto_block and self.spec is None:
+            # spec config is part of the key: toggling spec on/off across
+            # engines in one process must not replay a stale probe
             probe_key = (cfg.name, policy, slots, kv_layout, cache_len,
                          max_new_cap, block_size if self._paged else 0,
                          self.num_blocks if self._paged else 0,
-                         self.table_len if self._paged else 0)
+                         self.table_len if self._paged else 0, None)
             if probe_key not in _PROBE_CACHE:
                 _PROBE_CACHE[probe_key] = self._probe_decode_block()
             self.decode_block = _PROBE_CACHE[probe_key]
@@ -230,6 +271,19 @@ class ServeEngine:
             # donated so the COW clone rewrites pool blocks in place
             # instead of materializing a second pool
             self._cow_jit = jax.jit(cow_copy, donate_argnums=(0,))
+        if self.spec is not None:
+            # draft loop: k+1 draft decode steps in one compiled scan
+            # (the last step only commits the final proposal's KV)
+            self._draft_jit = jax.jit(self._spec_draft, static_argnums=(8,),
+                                      donate_argnums=(1,))
+            # verify-wave: commit + all-position logits + acceptance +
+            # rollback of the device counters, one compiled program
+            self._spec_jit = jax.jit(self._spec_wave, static_argnums=(5, 6),
+                                     donate_argnums=(1,))
+            # draft-side admission: prefill the draft cache for freshly
+            # armed decode residents
+            self._draft_admit_jit = jax.jit(self._draft_admit,
+                                            donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     # Compiled programs
@@ -351,6 +405,136 @@ class ServeEngine:
                                         eos, max_new, temp, top_k, keys)
 
     # ------------------------------------------------------------------
+    # Speculative decoding: draft scan + verify-wave (compiled)
+    # ------------------------------------------------------------------
+
+    def _spec_draft(self, dparams, dcache, tokens, temp, top_k, keys,
+                    n_gen, lens, greedy_only):
+        """Draft ``k`` proposals per slot, entirely on device.
+
+        The draft cache's counters are first re-clamped to ``lens`` (the
+        target's committed extent) — that is the draft-side rollback of
+        positions over-drafted before the previous wave's rejections.
+        The scan runs ``k + 1`` draft decode steps: step j consumes the
+        previous proposal (step 0 the slot's last committed token) and
+        samples proposal j+1 with the plain-decode key stream
+        ``fold_in(key, n_gen + j)`` — so a self-draft proposes exactly
+        the tokens plain decode would emit and everything is accepted.
+        The final step only commits its input's KV (its proposal is
+        discarded): the draft cache ends the wave covering every token
+        the target might accept. In ``rejection`` mode the per-proposal
+        draft distribution rides along for the acceptance test.
+        """
+        k = self.spec.k
+        dcache = {"segments": _clamp_lengths(dcache["segments"], lens),
+                  "position": lens}
+        want_q = self.spec.accept_mode == "rejection" and not greedy_only
+
+        def step(carry, j):
+            tok, cache = carry
+            logits, cache = decode_step(self.draft_cfg, dparams,
+                                        self.draft_ctx, tok, cache)
+            nxt = sample_tokens(logits[:, -1], fold_step(keys, n_gen + j),
+                                temp, top_k, greedy_only=greedy_only)
+            q = (token_probs(logits[:, -1], temp, top_k) if want_q
+                 else jnp.zeros((tok.shape[0], 0), jnp.float32))
+            return (nxt[:, None], cache), (nxt, q)
+
+        (_, dcache), (dt, dq) = jax.lax.scan(
+            step, (tokens, dcache), jnp.arange(k + 1, dtype=jnp.int32))
+        dtoks = jnp.moveaxis(dt[:k], 0, 1)                     # (S, k)
+        dqs = jnp.moveaxis(dq[:k], 0, 1) if want_q else None   # (S, k, V)
+        return dtoks, dqs, dcache
+
+    def _spec_wave(self, params, state, dtoks, dq, tail_len, hist_blocks,
+                   greedy_only):
+        """Verify every resident's drafted window in ONE compiled call
+        and commit the accepted prefix.
+
+        The window ``[last_token, draft_1..draft_k]`` is verified by
+        ``models.spec_verify`` (per-row ``(c0, tail_len)`` batched-chunk
+        contract, decode-exact numerics), the target's own samples are
+        drawn with the plain-decode key stream, and acceptance picks how
+        many tokens commit: the leading draft matches plus one target
+        token (the correction at the first mismatch, or the bonus when
+        everything survives), truncated at the first committed EOS and
+        the row's remaining ``max_new`` budget. Rejected positions roll
+        back on device here — per-layer ``length`` and ``position``
+        re-clamp to the accepted extent, so the stale KV past it is
+        unreadable — and the host releases their whole blocks via
+        ``BlockAllocator.trim`` right after (the per-slot committed
+        count is recovered host-side from the harvest's ``n_gen`` fetch,
+        keeping the wave at one sync like a decode chunk).
+        """
+        S, C = self.slots, self.spec.k + 1
+        cap = self.max_new_cap
+        cache = state["cache"]
+        c0 = cache["position"]
+        slot_idx = jnp.arange(S, dtype=jnp.int32)
+        window = jnp.concatenate([state["tokens"], dtoks], axis=1)
+        logits, cache = spec_verify(self.cfg, params, self.ctx, window,
+                                    cache, slot_idx, c0, tail_len,
+                                    hist_blocks=hist_blocks)
+        n_gen, act = state["n_gen"], state["active"]
+        # one flattened (S*C)-row sampling call: per-row ops (argmax /
+        # top-k mask / per-key categorical) are exactly what C sequential
+        # decode steps would run, at a C-independent op count
+        V = logits.shape[-1]
+        flat = logits.reshape(S * C, V)
+        keys_rep = jnp.repeat(state["keys"], C, axis=0)
+        ctr = (n_gen[:, None] + jnp.arange(C)[None]).reshape(S * C)
+        temp_rep = jnp.repeat(state["temp"], C)
+        topk_rep = jnp.repeat(state["top_k"], C)
+        tt = sample_tokens(flat, fold_step(keys_rep, ctr), temp_rep,
+                           topk_rep,
+                           greedy_only=greedy_only).reshape(S, C)
+        n_draft = jnp.maximum(tail_len - 1, 0)
+        if self.spec.accept_mode == "rejection" and not greedy_only:
+            p = token_probs(flat, temp_rep, topk_rep).reshape(S, C, V)
+            n_acc, committed = accept_rejection(dtoks, dq, p, tt,
+                                                state["keys"], n_gen,
+                                                n_draft)
+        else:
+            n_acc, committed = accept_exact(dtoks, tt, n_draft), tt
+        m = n_acc + 1
+        is_eos = committed == state["eos"][:, None]
+        m = jnp.where(jnp.any(is_eos, axis=1),
+                      jnp.minimum(m, jnp.argmax(is_eos, axis=1) + 1), m)
+        m = jnp.where(act, jnp.minimum(m, jnp.maximum(tail_len, 1)), 0)
+        jj = jnp.arange(C)[None]
+        row = jnp.where(jj < m[:, None], n_gen[:, None] + jj, cap)
+        out = state["out"].at[slot_idx[:, None], row].set(committed,
+                                                          mode="drop")
+        n_gen2 = n_gen + m
+        lastj = jnp.maximum(m - 1, 0)[:, None]
+        last = jnp.take_along_axis(committed, lastj, axis=1)[:, 0]
+        hit_eos = jnp.take_along_axis(is_eos, lastj, axis=1)[:, 0]
+        still = act & ~hit_eos & (n_gen2 < state["max_new"])
+        new_len = c0 + m
+        cache = {"segments": _clamp_lengths(cache["segments"], new_len),
+                 "position": new_len, "block_tbl": cache["block_tbl"]}
+        return {**state, "cache": cache,
+                "tokens": jnp.where(act[:, None], last[:, None],
+                                    state["tokens"]),
+                "out": out, "n_gen": n_gen2, "active": still,
+                "steps": state["steps"] + 1,
+                "committed": state["committed"] + jnp.sum(m)}
+
+    def _draft_admit(self, dparams, dcache, tokens, lengths, slot_idx):
+        """Prefill the draft model's dense cache rows for freshly armed
+        decode residents (padding rows' ``slot_idx`` sentinel drops),
+        mirroring the dense half of ``_admit_batch``."""
+        batch = {"tokens": tokens, "lengths": lengths}
+        _, cache_n = prefill(self.draft_cfg, dparams, self.draft_ctx, batch,
+                             cache_budget=self._draft_cache_len)
+        segments = [jax.tree.map(
+            lambda d, s: d.at[:, slot_idx].set(s, mode="drop"), ds, ss)
+            for ds, ss in zip(dcache["segments"], cache_n["segments"])]
+        return {"segments": segments,
+                "position": dcache["position"].at[slot_idx].set(
+                    cache_n["position"], mode="drop")}
+
+    # ------------------------------------------------------------------
     # Request lifecycle (host side)
     # ------------------------------------------------------------------
 
@@ -403,6 +587,13 @@ class ServeEngine:
                       "cow_copies": 0, "preemptions": 0,
                       "swap_out_bytes": 0, "swap_in_bytes": 0,
                       "swap_s": 0.0}
+        if self.spec is not None:
+            self._draft_cache = init_cache(self.draft_cfg, self.draft_ctx,
+                                           self.slots,
+                                           self._draft_cache_len)
+            self._host.update({"spec_waves": 0, "spec_drafted": 0,
+                               "spec_accepted": 0, "spec_rolled_back": 0,
+                               "spec_draft_prefill_tokens": 0})
         self._cache_bytes = sum(
             leaf.nbytes for seg in self.state["cache"]["segments"]
             for leaf in jax.tree.leaves(seg))
@@ -515,7 +706,8 @@ class ServeEngine:
             if self._swapped:
                 return              # restore before admitting new work
         gk = self._affinity_key if self.prefix_affinity else None
-        while self.scheduler.pending:
+        held: set = set()
+        while self.scheduler.pending > len(held):
             free = self._free_slots()
             if not free:
                 return
@@ -524,9 +716,17 @@ class ServeEngine:
             # mapped again before anything can evict them
             hot = ({j["akey"] for j in self._tail_jobs
                     if j.get("akey") is not None} if gk else ())
-            head = self.scheduler.first(group_key=gk, hot=hot)
+            head = self.scheduler.first(group_key=gk, hot=hot, skip=held)
+            if head is None:
+                return
             plen = len(head.prompt)
             hit_ids, cached, partial = self._lookup(head)
+            if self._dedup_hold(head, cached):
+                # cross-wave dedup: this head waits a wave for the
+                # in-flight sharer to register — but only IT is held;
+                # unrelated work behind it still admits this step
+                held.add(head)
+                continue
             if cached or plen > self.prefill_chunk:
                 if len(self._tail_jobs) >= self.tail_batch:
                     return          # wave is full: head waits its turn
@@ -543,20 +743,35 @@ class ServeEngine:
                 self._note_residency()
                 continue
             taken: List[int] = []
+            batch_reqs: List = []
 
             def ok(r):
                 if len(r.prompt) > self.prefill_chunk:
                     return False        # long prompt: chunked next round
                 if r is not head and self._lookup(r)[1]:
                     return False        # cached prefix: tail path next round
+                bs = self.block_size
+                if self.prefix_cache and len(r.prompt) - 1 >= bs and any(
+                        len(q.prompt) >= bs
+                        and np.array_equal(np.asarray(r.prompt[:bs]),
+                                           q.prompt[:bs])
+                        for q in batch_reqs):
+                    # cross-wave dedup: r shares >= one full block with a
+                    # request already in THIS forming wave; co-admitting
+                    # would compute the shared content twice. Held one
+                    # wave, it prefix-hits the blocks the wave registers
+                    # (only the first block is compared: that is the
+                    # whole trigger condition, so cost stays O(bs))
+                    return False
                 if self._paged_admit_slot(free[len(taken)], r, (),
                                           False, 0) is None:
                     return False
                 taken.append(free[len(taken)])
+                batch_reqs.append(r)
                 return True
 
             reqs = self.scheduler.select(len(free), admit_ok=ok,
-                                         group_key=gk, hot=hot)
+                                         group_key=gk, hot=hot, skip=held)
             if not reqs:
                 return
             # lazy prefill allocation: just the prompt's blocks for now
@@ -583,6 +798,32 @@ class ServeEngine:
         # _affinity_key: grouping tolerates staleness, admission doesn't)
         req._affinity_memo = (ver[:2], tuple(hit[0]) or None)
         return hit
+
+    def _dedup_hold(self, req, cached: int) -> bool:
+        """Cross-wave dedup (tail path): when ``req`` extends the same
+        chain an in-flight tail admission is still prefilling, admitting
+        it now would recompute the shared content. Hold it while any
+        in-flight job has at least one block of overlap ``req`` hasn't
+        prefix-hit yet — a wave later the job's freshly registered
+        blocks turn the overlap into a hit. Bounded: jobs leave
+        ``_tail_jobs`` in finitely many waves (completion or
+        preemption), registration is monotone, and the gap closes once
+        the registered extent covers the overlap."""
+        if not self.prefix_cache or not self._tail_jobs:
+            return False
+        # the hold triggers iff >= one whole block of overlap remains
+        # unhit, i.e. the first cached + block_size tokens agree — so
+        # only that slice is ever compared, keeping the per-step cost
+        # O(block_size + cached) per in-flight job instead of O(prompt)
+        need = cached + self.block_size
+        if len(req.prompt) - 1 < need:
+            return False
+        head = np.asarray(req.prompt[:need])
+        for job in self._tail_jobs:
+            jp = job["req"].prompt
+            if len(jp) >= need and np.array_equal(head, jp[:need]):
+                return True
+        return False
 
     def _paged_admit_slot(self, slot: int, req, hit_ids, partial: bool,
                           cached: int) -> Optional[int]:
@@ -687,6 +928,9 @@ class ServeEngine:
                 # content-address the freshly written prompt blocks so
                 # later requests sharing the prefix skip their prefill
                 self.alloc.register_prefix(s, r.prompt, len(r.prompt))
+        if self.spec is not None:
+            self._draft_prefill_rows([(s, r.prompt)
+                                      for s, r in zip(taken, reqs)])
 
     def _advance_tail_jobs(self) -> None:
         """Advance EVERY in-progress tail/chunked prefill by one window —
@@ -779,6 +1023,11 @@ class ServeEngine:
             self._tail_jobs.remove(j)
             self._slot_req[j["slot"]] = j["req"]
             self._written[j["slot"]] = len(j["req"].prompt)
+        if self.spec is not None:
+            # the tail computed only the uncached suffix, but the draft
+            # has no prefix cache: its rows prefill the whole prompt
+            self._draft_prefill_rows([(j["slot"], j["req"].prompt)
+                                      for j in done])
 
     def _ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow the slot's block table to cover ``n_tokens``. Under
@@ -1062,15 +1311,142 @@ class ServeEngine:
             st["keys"] = st["keys"].at[slot].set(keys)
             self._slot_req[slot] = req
             self._written[slot] = w
+            if self.spec is not None:
+                # rebuild the draft cache from the consumed stream
+                # (prompt + generated-so-far): swap records never carry
+                # draft payloads
+                consumed = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(rec["out"][:rec["n_gen"] - 1], np.int32)])
+                self._draft_prefill_rows([(slot, consumed)])
         self._host["swap_in_bytes"] += rec["bytes"]
         self._host["swap_s"] += time.perf_counter() - t0
 
-    def _harvest(self) -> None:
-        """Admission-boundary sync: pull finished slots' token buffers."""
+    # ------------------------------------------------------------------
+    # Speculative decoding: host driver
+    # ------------------------------------------------------------------
+
+    def _draft_prefill_rows(self, rows) -> None:
+        """Prefill the draft cache for freshly armed decode residents.
+
+        ``rows``: (slot, consumed-token array) pairs — the prompt at
+        admission / tail completion, or prompt + generated-so-far on a
+        swap-in restore (the draft cache never travels with a swap
+        record; it is rebuilt from tokens, which keeps swap bytes
+        unchanged and the draft strictly a performance hint)."""
+        if self.spec is None or not rows:
+            return
+        n = len(rows)
+        n_pad = min(_pow2_ceil(n), self.slots)
+        lens = np.ones((n_pad,), np.int32)
+        lens[:n] = [len(t) for _, t in rows]
+        L = -(-int(lens.max()) // self.prefill_bucket) * self.prefill_bucket
+        toks = np.zeros((n_pad, L), np.int32)
+        slot_idx = np.full((n_pad,), self.slots, np.int32)   # pad: dropped
+        for i, (s, t) in enumerate(rows):
+            toks[i, :len(t)] = t
+            slot_idx[i] = s
+        self._draft_cache = self._draft_admit_jit(
+            self.draft_params, self._draft_cache, jnp.asarray(toks),
+            jnp.asarray(lens), jnp.asarray(slot_idx))
+        self._host["spec_draft_prefill_tokens"] += int(
+            sum(len(t) for _, t in rows))
+
+    def _spec_step(self) -> None:
+        """One speculative wave over every decode resident.
+
+        The draft proposes ``k`` tokens per slot (one compiled scan of
+        the cheap model), the target verifies all residents' windows in
+        ONE compiled call (``_spec_wave``), the accepted prefix plus one
+        target token commit, and the rejected suffix rolls back — the
+        wave re-clamps the device counters, this driver releases the
+        whole blocks past each survivor's accepted extent
+        (``BlockAllocator.trim``). Capacity/COW for the full window is
+        secured up front exactly like a decode chunk, so preemption and
+        prefix-shared (COW) blocks compose with the wave unchanged.
+        """
+        C = self.spec.k + 1
+        tail = np.zeros((self.slots,), np.int32)
+        hb_need = 1
+        for s in list(self._slot_req):
+            if s not in self._slot_req:
+                continue            # preempted by an earlier iteration
+            r = self._slot_req[s]
+            w = self._written[s]
+            # the window is clamped to the row's remaining max_new
+            # budget, so peak occupancy never exceeds the admission-time
+            # worst case (prompt + max_new - 1) — no spec headroom
+            t = min(C, len(r.prompt) + r.max_new_tokens - 1 - w)
+            if not self._ensure(s, w + t):
+                continue            # s itself was swapped out
+            if s not in self._slot_req or not self._cow_guard(s, w, w + t):
+                continue
+            tail[s] = t
+            hb_need = max(hb_need, self.alloc.blocks_for_tokens(w + t))
+        for s in range(self.slots):
+            # a slot whose capacity was secured and then swapped out by a
+            # LATER iteration's preemption must ride the wave fully
+            # masked (its table row is already parked on the sentinel)
+            if tail[s] and s not in self._slot_req:
+                tail[s] = 0
         if not self._slot_req:
             return
+        if not tail.any():
+            # no slot has budget to draft — every resident finished at
+            # admission (max_new == 1); they still need harvesting or
+            # they would sit in their slots forever
+            self._harvest()
+            return
+        self._push_tables()
+        greedy_only = all(r.temperature <= 0.0
+                          for r in self._slot_req.values())
+        n_gen_before = {s: self._written[s] - len(r.prompt) + 1
+                        for s, r in self._slot_req.items()}
+        st = self.state
+        dtoks, dq, self._draft_cache = self._draft_jit(
+            self.draft_params, self._draft_cache, st["tokens"], st["temp"],
+            st["top_k"], st["keys"], st["n_gen"], st["cache"]["position"],
+            greedy_only)
+        hb = min(_pow2_ceil(hb_need), self.table_len)
+        self.state = self._spec_jit(self.params, self.state, dtoks, dq,
+                                    jnp.asarray(tail), hb, greedy_only)
+        # ONE host sync per wave (like a decode chunk): the harvest's
+        # (active, n_gen) fetch also yields each row's committed count
         act, n_gen = jax.device_get((self.state["active"],
                                      self.state["n_gen"]))
+        drafted = accepted = 0
+        for s, n0 in n_gen_before.items():
+            m_s = int(n_gen[s]) - n0
+            if m_s > 0:
+                # rows committing nothing were inactive the whole wave
+                # (finished at admission, e.g. EOS on the first token) —
+                # their proposals were never in play, so counting them
+                # as drafted(-and-rolled-back) or letting their m = 0
+                # subtract from the accepted total would corrupt the
+                # accept rate the CI gate watches
+                drafted += max(int(tail[s]) - 1, 0)
+                accepted += m_s - 1
+        self._host["spec_waves"] += 1
+        self._host["spec_drafted"] += drafted
+        self._host["spec_accepted"] += accepted
+        self._host["spec_rolled_back"] += drafted - accepted
+        self._harvest(act, n_gen)
+        # rollback, host side: finished slots were fully released by the
+        # harvest; survivors drop the whole blocks past their accepted
+        # extent (freshly grown for this wave, so never shared/indexed)
+        for s in list(self._slot_req):
+            if self.alloc.trim(s, self._written[s]):
+                self._tbl_dirty = True
+
+    def _harvest(self, act=None, n_gen=None) -> None:
+        """Admission-boundary sync: pull finished slots' token buffers.
+        ``act``/``n_gen`` may be passed pre-fetched (the spec step pulls
+        them for its acceptance accounting) to keep one sync per step."""
+        if not self._slot_req:
+            return
+        if act is None:
+            act, n_gen = jax.device_get((self.state["active"],
+                                         self.state["n_gen"]))
         if self._paged:
             # exact per-slot progress from the device counter: each decode
             # step writes the KV of the token it consumes, so a slot holds
@@ -1116,19 +1492,24 @@ class ServeEngine:
 
     def step(self) -> None:
         """One admission + one batched tail-wave window of the in-progress
-        tail/chunked admissions + one on-device decode chunk + harvest."""
+        tail/chunked admissions + one decode round (a speculative
+        draft+verify wave when spec is enabled, else one on-device decode
+        chunk) + harvest."""
         self._admit()
         if self._tail_jobs:
             self._advance_tail_jobs()
         if self._slot_req:
-            greedy_only = all(r.temperature <= 0.0
-                              for r in self._slot_req.values())
             t0 = time.perf_counter()
-            if self._paged:
-                self._ensure_decode_blocks()
-            self.state = self._decode_jit(self.params, self.state,
-                                          greedy_only)
-            self._harvest()               # device_get doubles as the sync
+            if self.spec is not None:
+                self._spec_step()         # drafts + verify + harvest+trim
+            else:
+                greedy_only = all(r.temperature <= 0.0
+                                  for r in self._slot_req.values())
+                if self._paged:
+                    self._ensure_decode_blocks()
+                self.state = self._decode_jit(self.params, self.state,
+                                              greedy_only)
+                self._harvest()           # device_get doubles as the sync
             self._host["decode_s"] += time.perf_counter() - t0
 
     def _flush_partial(self) -> None:
@@ -1222,6 +1603,15 @@ class ServeEngine:
         d["tokens_out"] = int(committed) + prefill_tokens
         d["decode_step_s"] = (d["decode_s"] / max(int(steps), 1))
         d["max_residents"] = self._max_residents
+        d["decode_block"] = self.decode_block
+        d["decode_block_mode"] = self._decode_block_mode
+        if self.spec is not None:
+            drafted = d["spec_drafted"]
+            d["spec_accept_rate"] = (d["spec_accepted"] / drafted
+                                     if drafted else 0.0)
+            d["spec_k"] = self.spec.k
+            d["spec_draft_layers"] = self.spec.resolved_layers(self.cfg)
+            d["spec_accept_mode"] = self.spec.accept_mode
         if self._paged:
             d["prefix_lookups"] = self.alloc.prefix_lookups
             d["prefix_hit_blocks"] = self.alloc.prefix_hit_blocks

@@ -43,16 +43,41 @@ def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray,
     samples.
     """
     logits = logits.astype(jnp.float32)
-    V = logits.shape[-1]
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     if greedy_only:
         return greedy
-    # per-row top-k threshold: value of the k-th largest logit
+    masked = _topk_masked(logits, top_k)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    drawn = jax.vmap(jax.random.categorical)(keys, masked / temp)
+    return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
+
+
+def _topk_masked(logits: jnp.ndarray, top_k: jnp.ndarray) -> jnp.ndarray:
+    """Logits with everything below each row's k-th largest pushed to
+    -inf (top_k == 0 disables). The shared filter behind sampling and
+    the speculative-decode acceptance probabilities."""
+    V = logits.shape[-1]
     kc = min(TOP_K_CAP, V)
     desc = jax.lax.top_k(logits, kc)[0]                       # (B, kc)
     kth = jnp.take_along_axis(
         desc, jnp.clip(top_k - 1, 0, kc - 1)[:, None], axis=-1)
-    masked = jnp.where((top_k[:, None] > 0) & (logits < kth), _NEG, logits)
+    return jnp.where((top_k[:, None] > 0) & (logits < kth), _NEG, logits)
+
+
+def token_probs(logits: jnp.ndarray, temperature: jnp.ndarray,
+                top_k: jnp.ndarray) -> jnp.ndarray:
+    """The categorical distribution :func:`sample_tokens` draws from.
+
+    logits (B, V); temperature (B,); top_k (B,). Stochastic rows get the
+    post-temperature, top-k-filtered softmax; greedy rows (temp <= 0)
+    get a one-hot at the argmax — so speculative rejection sampling
+    against these probabilities reduces to exact argmax matching for
+    greedy requests. Returns (B, V) fp32 rows summing to 1.
+    """
+    logits = logits.astype(jnp.float32)
+    masked = _topk_masked(logits, top_k)
     temp = jnp.maximum(temperature, 1e-6)[:, None]
-    drawn = jax.vmap(jax.random.categorical)(keys, masked / temp)
-    return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
+    p = jax.nn.softmax(masked / temp, axis=-1)
+    one_hot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                             dtype=jnp.float32)
+    return jnp.where(temperature[:, None] > 0.0, p, one_hot)

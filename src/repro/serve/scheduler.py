@@ -80,12 +80,13 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
-    def _ordered(self, group_key=None, hot=()) -> List:
+    def _ordered(self, group_key=None, hot=(), skip=()) -> List:
+        base = self._queue if not skip else \
+            [r for r in self._queue if r not in skip]
         if self.policy == "sjf":
-            base = sorted(self._queue,
-                          key=lambda r: (len(r.prompt), r._arrival))
+            base = sorted(base, key=lambda r: (len(r.prompt), r._arrival))
         else:
-            base = list(self._queue)
+            base = list(base)
         if group_key is None:
             return base
         # prefix-aware affinity: requests sharing a cached chain (equal
@@ -101,7 +102,7 @@ class Scheduler:
         # admissions have passed the same waiting policy head, grouping
         # pauses until the head itself is taken (a steady sharer stream
         # must not pin a stranger at the head forever).
-        if hot and self._bypass_head is base[0] \
+        if hot and base and self._bypass_head is base[0] \
                 and self._bypass_count >= HOT_BYPASS_CAP:
             hot = ()
         first_at: Dict = {}
@@ -118,12 +119,15 @@ class Scheduler:
         ranked.sort(key=lambda t: t[0])
         return [r for _, r in ranked]
 
-    def first(self, group_key=None, hot=()):
-        """Policy-ordered head of the queue (None when empty). The paged
-        engine peeks it to route prefix-hit / long prompts into tail
-        admission; ``group_key``/``hot`` apply the same prefix-affinity
-        grouping as ``select``."""
-        return self._ordered(group_key, hot)[0] if self._queue else None
+    def first(self, group_key=None, hot=(), skip=()):
+        """Policy-ordered head of the queue (None when empty or fully
+        skipped). The paged engine peeks it to route prefix-hit / long
+        prompts into tail admission; ``group_key``/``hot`` apply the
+        same prefix-affinity grouping as ``select``; ``skip`` excludes
+        requests the engine is holding this step (cross-wave dedup) so
+        unrelated work behind them still admits."""
+        ordered = self._ordered(group_key, hot, skip)
+        return ordered[0] if ordered else None
 
     def _policy_head(self):
         """Ungrouped policy head (what pure FCFS/SJF would admit next)."""
@@ -153,7 +157,7 @@ class Scheduler:
         self._note_removal(req, head)
 
     def select(self, max_n: int, *, equal_length_only: bool = False,
-               admit_ok=None, group_key=None, hot=()) -> List:
+               admit_ok=None, group_key=None, hot=(), skip=()) -> List:
         """Pop up to ``max_n`` requests for one batched prefill.
 
         ``equal_length_only``: restrict the batch to the leader's exact
@@ -166,11 +170,12 @@ class Scheduler:
         admitted. ``group_key`` (callable req -> hashable | None) groups
         requests with equal keys back-to-back, and ``hot`` keys (chains
         with an admission in flight) rank first (prefix-affinity; see
-        ``_ordered``) before the scan.
+        ``_ordered``) before the scan. ``skip`` excludes requests the
+        engine is holding this step (cross-wave dedup).
         """
         if max_n <= 0 or not self._queue:
             return []
-        ordered = self._ordered(group_key, hot)
+        ordered = self._ordered(group_key, hot, skip)
         batch: List = []
         for r in ordered:
             if len(batch) >= max_n:

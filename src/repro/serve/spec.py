@@ -1,0 +1,220 @@
+"""Speculative decoding: low-bit draft proposals, one verify-wave, rollback.
+
+The serve engine's decode loop samples one token per model call; this
+module supplies the pieces that let a cheap *draft* model propose ``k``
+tokens per resident slot and the full target model verify all residents'
+drafts in ONE compiled wave (``models.spec_verify``), committing up to
+``k + 1`` tokens per slot per target call:
+
+* **Draft construction** (:func:`make_draft`) — the draft is a cheap
+  variant of the *same* quantized model: a truncated-layer prefix (the
+  first ``draft_layers`` layers) and/or a lower-bit deployment policy,
+  sharing the embedding / final-norm / head parameters by reference (no
+  extra HBM for the shared pieces; only the truncated trunk is "second
+  model resident"). ``draft_layers == n_layers`` with the target policy
+  is *self-draft*: the draft IS the target (acceptance ~1, the upper
+  bound workload the CI gate pins).
+* **Acceptance** (:func:`accept_exact`, :func:`accept_rejection`) — how
+  many proposals survive against the target's logits:
+
+  - ``exact``: position ``j`` is accepted iff the draft token equals the
+    token the target itself would sample there with the plain-decode
+    PRNG stream (``fold_in(slot_key, n_gen + j)``). The committed stream
+    is *identical to plain decode by construction* — greedy and sampled
+    — so token parity holds for ANY draft, across preemption/swap and
+    rollback. This is the default.
+  - ``rejection``: speculative (Leviathan-style) rejection sampling —
+    accept draft token ``d`` with probability ``min(1, p(d) / q(d))``,
+    sample the first rejection from the normalized residual
+    ``max(p - q, 0)``. The committed-token *distribution* provably
+    equals the target's (unit-tested on synthetic distributions); with
+    a self-draft the coupled keys accept everything and the stream
+    collapses to plain decode exactly.
+
+* **Rollback** is the allocator's job (``BlockAllocator.trim``): the
+  verify-wave writes all ``k + 1`` candidate KVs through the block
+  table up front, and rejected suffixes are un-written by resetting the
+  device ``length``/``position`` counters to the accepted extent and
+  releasing the whole blocks past it.
+
+All randomness is derived from the per-slot key and the generated-token
+counter only (never from wave packing), so a preempted-and-resumed slot
+replays the identical stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serve.sampling import fold_step
+
+# fold_in tags deriving the rejection-sampling streams from the plain-
+# decode step key (the step key itself draws the target/bonus/residual
+# tokens, so exact-mode and full-acceptance paths reuse it verbatim)
+_COIN_TAG = 0x5BEC
+_RESID_TAG = 0x5BED
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs (engine ``spec=`` argument).
+
+    ``k``: draft tokens proposed per slot per wave (the wave verifies
+    ``k + 1`` positions and commits 1..k+1 tokens).
+    ``draft_layers``: truncated-layer draft depth; ``None`` = half the
+    target's layers (min 1); equal to ``n_layers`` = self-draft.
+    ``draft_policy``: deployment policy for the draft (``None`` = the
+    target's policy) — e.g. a lower cache-bit variant.
+    ``accept_mode``: ``"exact"`` (plain-decode-equivalent, default) or
+    ``"rejection"`` (speculative rejection sampling for temperature /
+    top-k requests; greedy rows always use exact matching).
+    """
+    k: int = 4
+    draft_layers: Optional[int] = None
+    draft_policy: Optional[str] = None
+    accept_mode: str = "exact"
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")
+        if self.accept_mode not in ("exact", "rejection"):
+            raise ValueError(f"accept_mode must be 'exact' or 'rejection', "
+                             f"got {self.accept_mode!r}")
+
+    def resolved_layers(self, cfg: ModelConfig) -> int:
+        d = self.draft_layers
+        if d is None:
+            d = max(1, cfg.n_layers // 2)
+        if not 1 <= d <= cfg.n_layers:
+            raise ValueError(f"draft_layers={d} outside [1, {cfg.n_layers}]")
+        return d
+
+    def key(self) -> tuple:
+        """Hashable identity for probe-cache keys and memoization."""
+        return (self.k, self.draft_layers, self.draft_policy,
+                self.accept_mode)
+
+
+def make_draft(cfg: ModelConfig, params: Dict,
+               spec: SpecConfig) -> Tuple[ModelConfig, Dict]:
+    """Build the draft (config, params) from the target's.
+
+    The draft is the target's first ``draft_layers`` layers; embedding,
+    positional tables, final norm, and the (possibly tied) head are the
+    *same objects* as the target's — shared HBM, updated in lockstep if
+    the caller ever swaps params. Layer slicing respects the scanned
+    segment layout: full-pattern repeats slice the stacked leading axis,
+    a pattern remainder becomes a repeat-1 segment (mirroring
+    ``models.segment_plan`` for the truncated config).
+    """
+    from repro.models import segment_plan
+    L = spec.resolved_layers(cfg)
+    if L == cfg.n_layers and spec.draft_policy is None:
+        return cfg, params          # self-draft: the target verbatim
+    dcfg = cfg.replace(name=f"{cfg.name}-draft{L}", n_layers=L)
+    if L == cfg.n_layers:
+        return dcfg, params         # same trunk, different policy
+    pat = cfg.block_pattern
+    n_full0 = segment_plan(cfg)[0][1]
+    dfull, rem = divmod(L, len(pat))
+    segs = []
+    src0 = params["segments"][0]
+    if dfull:
+        segs.append(jax.tree.map(lambda x: x[:dfull], src0))
+    if rem:
+        # the partial super-block comes from the next stacked row (or the
+        # target's own remainder segment when the trunk is exhausted)
+        if dfull < n_full0:
+            row = jax.tree.map(lambda x: x[dfull:dfull + 1], src0)
+        else:
+            row = jax.tree.map(lambda x: x[:1], params["segments"][1])
+        segs.append({str(i): row[str(i)] for i in range(rem)})
+    dparams = dict(params)          # embed / norms / head shared by ref
+    dparams["segments"] = segs
+    return dcfg, dparams
+
+
+# --------------------------------------------------------------------------
+# Acceptance
+# --------------------------------------------------------------------------
+
+def accept_exact(draft: jnp.ndarray, target: jnp.ndarray,
+                 n_draft: jnp.ndarray) -> jnp.ndarray:
+    """Leading-match acceptance count.
+
+    draft (S, k): proposed tokens; target (S, k+1): the token the target
+    samples at each window position with the plain-decode key stream;
+    n_draft (S,): proposals actually in play this wave (rows near their
+    ``max_new`` budget draft fewer). Returns n_acc (S,) in [0, n_draft]:
+    the length of the leading run where ``draft[:, j] == target[:, j]``.
+    """
+    k = draft.shape[1]
+    live = jnp.arange(k)[None] < n_draft[:, None]
+    match = (draft == target[:, :-1]) & live
+    return jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+
+
+def accept_rejection(draft: jnp.ndarray, q: jnp.ndarray, p: jnp.ndarray,
+                     target: jnp.ndarray, keys: jnp.ndarray,
+                     n_gen: jnp.ndarray,
+                     n_draft: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Speculative rejection sampling over a wave of drafts.
+
+    draft (S, k) proposals; q (S, k, V) the draft model's sampling
+    distribution at each proposal; p (S, k+1, V) the target's; target
+    (S, k+1) the target's own samples under the plain-decode key stream
+    (used verbatim for the bonus token, so full acceptance reproduces
+    plain decode bit-exactly when q == p); keys (S, 2) slot PRNG keys;
+    n_gen (S,) generated-token counters; n_draft (S,) live proposals.
+
+    Returns (n_acc (S,), committed (S, k+1)): committed[:, j] is the
+    draft token for accepted positions, the residual sample at the first
+    rejection, and the target's sample beyond (only position ``n_acc``
+    is ever committed there — the bonus token when all drafts survive).
+    The committed-token distribution equals sampling from ``p`` directly
+    (Leviathan et al. 2023), which the unit test checks empirically.
+    """
+    S, k = draft.shape
+    ctr = (n_gen[:, None] + jnp.arange(k)[None]).reshape(S * k)
+    step_keys = fold_step(jnp.repeat(keys, k, axis=0),
+                          ctr).reshape(S, k, 2)
+    coin_keys = jax.vmap(jax.vmap(lambda kk: jax.random.fold_in(
+        kk, _COIN_TAG)))(step_keys)
+    resid_keys = jax.vmap(jax.vmap(lambda kk: jax.random.fold_in(
+        kk, _RESID_TAG)))(step_keys)
+    p_d = jnp.take_along_axis(p[:, :k], draft[..., None], axis=-1)[..., 0]
+    q_d = jnp.take_along_axis(q, draft[..., None], axis=-1)[..., 0]
+    u = jax.vmap(jax.vmap(lambda kk: jax.random.uniform(kk)))(coin_keys)
+    live = jnp.arange(k)[None] < n_draft[:, None]
+    # strict <: uniform draws live in [0, 1), so u == 0.0 must not accept
+    # a token the target assigns zero probability (outside its top-k /
+    # off the greedy one-hot); u < 1 keeps the self-draft (p == q)
+    # collapse accepting everything
+    ok = (u * q_d < p_d) & live
+    n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    # residual distribution at every draft position; only the first
+    # rejection's is consumed. A numerically-empty residual (q >= p
+    # everywhere it matters) falls back to the target distribution.
+    resid = jnp.maximum(p[:, :k] - q, 0.0)
+    rsum = jnp.sum(resid, axis=-1, keepdims=True)
+    resid = jnp.where(rsum > 1e-9, resid / jnp.maximum(rsum, 1e-20),
+                      p[:, :k])
+    rtok = jax.vmap(jax.vmap(
+        lambda kk, pr: jax.random.categorical(kk, jnp.log(pr + 1e-20))))(
+        resid_keys, resid).astype(jnp.int32)
+    # committed stream: draft tokens below n_acc; at n_acc the residual
+    # sample — but only when a draft was actually rejected there
+    # (n_acc < n_draft); when every live draft survived (a full accept,
+    # or a window clamped by the max_new budget) the final position is
+    # the bonus: the target's own plain-decode sample
+    jj = jnp.arange(k + 1)[None]
+    dpad = jnp.concatenate([draft, target[:, -1:]], axis=1)
+    rpad = jnp.concatenate([rtok, target[:, -1:]], axis=1)
+    rejected = (jj == n_acc[:, None]) & (n_acc < n_draft)[:, None]
+    committed = jnp.where(jj < n_acc[:, None], dpad,
+                          jnp.where(rejected, rpad, target))
+    return n_acc, committed

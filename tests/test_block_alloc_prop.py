@@ -34,6 +34,8 @@ def _op():
                   st.just(0)),
         st.tuples(st.just("harvest_register"), st.integers(0, SLOTS - 1),
                   st.just(0)),
+        st.tuples(st.just("trim"), st.integers(0, SLOTS - 1),
+                  st.integers(0, MAX_TOKENS)),
     )
 
 
@@ -92,6 +94,14 @@ def test_block_conservation_under_random_lifecycle(ops, rnd):
         elif kind == "harvest_register" and active:
             upto = min(written[slot], len(prompts[slot]))
             a.register_prefix(slot, prompts[slot], upto)
+        elif kind == "trim" and active:
+            # speculative rollback: drop whole blocks past n tokens
+            # (refcounts of shared blocks drop, indexed blocks park on
+            # the LRU, boundary index entries are repaired)
+            a.trim(slot, n)
+            assert len(a.owned(slot)) <= a.blocks_for_tokens(n)
+            written[slot] = min(written[slot],
+                                len(a.owned(slot)) * BLOCK_SIZE)
         a.check()                      # conservation after every op
 
     # full teardown returns every block to free/evictable

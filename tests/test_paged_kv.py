@@ -214,6 +214,35 @@ class TestPagedKernelParity:
                                    np.asarray(ref, np.float32),
                                    rtol=2e-5, atol=2e-5)
 
+    def test_spec_verify_kernel_matches_ref(self, rng):
+        """The verify-wave's multi-query kernel: one table walk serving
+        C queries per slot agrees with C per-position decode calls,
+        including per-query lengths and sentinel table tails."""
+        from repro.kernels.kvq_attn.ops import kvq_spec_verify_attn
+        from repro.kernels.kvq_attn.ref import kvq_spec_verify_attn_ref
+        B, C, H, Hkv, D, bs, NB, T = 3, 4, 4, 2, 16, 8, 10, 4
+        kp, vp, sk, sv = self._rand_pool(rng, NB, Hkv, bs, D)
+        q = jax.random.normal(jax.random.fold_in(rng, 5), (B, C, H, D),
+                              jnp.float32)
+        tbl = jnp.asarray([[7, 2, 9, 0], [1, 4, 6, 8], [3, 5, NB, NB]],
+                          jnp.int32)
+        base = jnp.asarray([2 * bs + 3, bs, 2], jnp.int32)
+        lengths = base[:, None] + 1 + jnp.arange(C)[None]   # (B, C)
+        out = kvq_spec_verify_attn(q, kp, vp, sk, sv, tbl, lengths,
+                                   use_pallas=True)
+        ref = kvq_spec_verify_attn_ref(q, kp, vp, sk, sv, tbl, lengths)
+        assert out.shape == (B, C, H, D)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+        # each query row also matches the single-query paged kernel
+        for j in range(C):
+            one = kvq_paged_decode_attn(q[:, j], kp, vp, sk, sv, tbl,
+                                        lengths[:, j])
+            np.testing.assert_allclose(np.asarray(out[:, j], np.float32),
+                                       np.asarray(one, np.float32),
+                                       rtol=2e-5, atol=2e-5)
+
     def test_gather_matches_manual_indexing(self, rng):
         NB, Hkv, bs, D = 6, 2, 4, 8
         kp, _, sk, _ = self._rand_pool(rng, NB, Hkv, bs, D)

@@ -284,8 +284,11 @@ class TestPrefixSharingEngine:
         assert on["prefix_hit_tokens"] > 20
 
     def test_wave_admissions_register_and_later_waves_hit(self, served):
-        """Requests admitted in one batched wave register their prompts;
-        a second wave of the same prompts prefills only tails."""
+        """Admitted requests register their prompts and same-chain
+        followers prefill only tails. Cross-wave dedup (PR 5) keeps the
+        second request of the FIRST pair out of the cold wave too: it
+        prefix-hits the first's freshly registered blocks in the same
+        engine step instead of recomputing the shared 34 tokens."""
         def reqs(uid0):
             return [_req(uid0 + i,
                          np.concatenate([np.arange(34, dtype=np.int32),
@@ -296,13 +299,18 @@ class TestPrefixSharingEngine:
         for r in reqs(0):
             eng.submit(r)
         eng.run_until_drained()
-        assert eng.stats()["prefix_hit_tokens"] == 0   # cold cache
+        # dedup: the second request hit the first's 32 full-block tokens
+        # (cold would have been 0 hits, 72 prompt tokens prefilled)
+        assert eng.stats()["prefix_hit_tokens"] >= 32
+        assert eng.stats()["prompt_tokens_prefilled"] <= 36 + 4
         wave2 = reqs(10)
         for r in wave2:
             eng.submit(r)
         stats = eng.run_until_drained()
         assert all(r.done for r in wave2)
-        assert stats["prefix_hit_tokens"] >= 2 * 32
+        # cumulative: wave-1's dedup hit (34) + both wave-2 prompts
+        # hitting their full cached extent (35 each, capped at plen - 1)
+        assert stats["prefix_hit_tokens"] >= 100
 
 
 class TestPreemption:

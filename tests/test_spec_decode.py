@@ -1,0 +1,392 @@
+"""Speculative decoding subsystem: draft -> verify-wave -> rollback.
+
+The load-bearing properties:
+
+* **Token parity** — exact-mode speculative output is identical to plain
+  decode (greedy AND sampled, same per-slot PRNG keys) for ANY draft,
+  including an adversarial one that is rejected every wave (maximal
+  rollback), across prefix-shared (COW) blocks and preempt/swap-resume.
+* **Rejection-sampling correctness** — the committed-token distribution
+  equals the target's (unit-tested on synthetic p/q), and a self-draft
+  with coupled keys reproduces plain decode exactly.
+* **Rollback hygiene** — rejected-suffix blocks return to the pool
+  (`BlockAllocator.trim`), conservation invariants hold after every
+  drain, and `_written` mirrors the device counters.
+
+Note on adversarial drafts: random-init models with tied embeddings
+degenerate to echo-like argmaxes and flat logits, so *any* coupled-key
+draft trivially matches the target. The sabotaged draft used here gets
+an untied sharp random head (scaled 40x) whose proposals genuinely
+diverge — acceptance collapses to ~0 and every wave exercises the
+rollback path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.qat import init_linear
+from repro.models import init_params
+from repro.serve.engine import _PROBE_CACHE, Request, ServeEngine
+from repro.serve.sampling import sample_tokens, token_probs
+from repro.serve.spec import SpecConfig, accept_rejection, make_draft
+
+
+@pytest.fixture(scope="module")
+def served(rng):
+    cfg = get_reduced_config("qwen2.5-3b")
+    return cfg, init_params(cfg, rng)
+
+
+def _req(uid, prompt, **kw):
+    return Request(uid=uid, prompt=np.asarray(prompt, np.int32), **kw)
+
+
+def _mixed_reqs(n=5, temperature=0.0, top_k=0, seed=3):
+    rng = np.random.default_rng(7)
+    return [_req(i, rng.integers(0, 250, int(rng.integers(6, 30))),
+                 max_new_tokens=int(rng.integers(3, 14)),
+                 temperature=temperature, top_k=top_k, seed=seed)
+            for i in range(n)]
+
+
+def _engine(served, spec, **kw):
+    cfg, params = served
+    kw.setdefault("slots", 4)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("block_size", 8)
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("max_seq_len", 96)
+    kw.setdefault("decode_block", 4)
+    return ServeEngine(cfg, params, spec=spec, **kw)
+
+
+def _sabotage(eng, cfg, scale=40.0):
+    """Give the draft an untied sharp random head: proposals diverge
+    from the target and acceptance collapses (maximal rollback)."""
+    eng.draft_cfg = eng.draft_cfg.replace(tie_embeddings=False)
+    head = init_linear(jax.random.PRNGKey(123), cfg.d_model, cfg.vocab_size)
+    eng.draft_params = {**eng.draft_params,
+                        "head": {**head, "w": head["w"] * scale}}
+
+
+def _run(eng, reqs, max_steps=50_000):
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained(max_steps=max_steps)
+    assert all(r.done for r in reqs)
+    assert eng.alloc.allocated_blocks == 0
+    eng.alloc.check()
+    return [r.generated for r in reqs], stats
+
+
+class TestTokenParity:
+    def test_greedy_parity_and_full_acceptance(self, served):
+        g_plain, _ = _run(_engine(served, None), _mixed_reqs())
+        g_spec, st = _run(_engine(served, SpecConfig(k=3, draft_layers=1)),
+                          _mixed_reqs())
+        assert g_spec == g_plain
+        assert st["spec_drafted"] > 0
+        assert st["spec_accept_rate"] == 1.0       # echo drafts all match
+        assert st["tokens_out"] == sum(len(g) for g in g_spec)
+
+    def test_sampled_exact_mode_parity(self, served):
+        kw = dict(temperature=1.5, top_k=0)
+        g_plain, _ = _run(_engine(served, None), _mixed_reqs(**kw))
+        g_spec, _ = _run(_engine(served, SpecConfig(k=3, draft_layers=1)),
+                         _mixed_reqs(**kw))
+        assert g_spec == g_plain
+
+    def test_adversarial_draft_parity_with_maximal_rollback(self, served):
+        """A draft that is wrong every wave: acceptance ~0, every wave
+        rolls back its whole suffix — and the output is still exactly
+        plain decode (greedy and hot-sampled)."""
+        cfg, _ = served
+        for kw in (dict(), dict(temperature=1.5)):
+            g_plain, _ = _run(_engine(served, None), _mixed_reqs(**kw))
+            eng = _engine(served, SpecConfig(k=3, draft_layers=1))
+            _sabotage(eng, cfg)
+            g_spec, st = _run(eng, _mixed_reqs(**kw))
+            assert g_spec == g_plain
+            assert st["spec_accept_rate"] == 0.0
+            assert st["spec_rolled_back"] == st["spec_drafted"] > 0
+
+    def test_parity_with_shared_prefix_and_cow_mid_wave(self, served):
+        """Prefix-hit followers share the warm chain's split block; the
+        spec wave's writes COW it mid-run and tokens still match the
+        spec-off engine."""
+        def shared(n=4):
+            rng = np.random.default_rng(3)
+            prefix = rng.integers(0, 250, 40).astype(np.int32)
+            return [_req(i, np.concatenate(
+                        [prefix, ((np.arange(5) * (i + 3) + i)
+                                  % 250).astype(np.int32)]),
+                        max_new_tokens=7, temperature=1.2, seed=11)
+                    for i in range(n)]
+
+        def staged(spec):
+            eng = _engine(served, spec, slots=6, block_size=16,
+                          num_blocks=48)
+            rs = shared()
+            _run(eng, rs[:1])
+            g, st = _run(eng, rs[1:])
+            return [rs[0].generated] + g, st
+
+        g_plain, _ = staged(None)
+        g_spec, st = staged(SpecConfig(k=3, draft_layers=1))
+        assert g_spec == g_plain
+        assert st["cow_copies"] >= 3 and st["prefix_hit_tokens"] > 0
+
+    def test_sampled_preempt_swap_resume_parity(self, served):
+        """Tight pool + optimistic admission: spec residents get swapped
+        out mid-stream (the draft cache is rebuilt from tokens on
+        restore) and still produce the uninterrupted solo stream."""
+        def mk(uid, plen, mn):
+            r = _req(uid, (np.arange(plen) * 7 + uid) % 250,
+                     max_new_tokens=mn)
+            r.temperature, r.top_k, r.seed = 0.7, 8, 5
+            return r
+
+        solo_req = mk(9, 10, 30)
+        solo = _engine(served, None, slots=1, num_blocks=32)
+        _run(solo, [solo_req])
+        eng = _engine(served, SpecConfig(k=3, draft_layers=1), num_blocks=8,
+                      admission="optimistic", prefix_cache=False)
+        reqs = [mk(0, 10, 30), mk(9, 10, 30), mk(2, 10, 30)]
+        _, st = _run(eng, reqs)
+        assert st["preemptions"] >= 1
+        assert reqs[1].generated == solo_req.generated
+
+    def test_eos_inside_window_stops_like_plain_decode(self, served):
+        """An EOS landing mid-window truncates the commit at it, exactly
+        where plain decode stops."""
+        base = _mixed_reqs(n=3, temperature=1.5)
+        g_plain, _ = _run(_engine(served, None), base)
+        eos = g_plain[0][min(2, len(g_plain[0]) - 1)]
+        def with_eos():
+            rs = _mixed_reqs(n=3, temperature=1.5)
+            for r in rs:
+                r.eos_id = int(eos)
+            return rs
+        ge_plain, _ = _run(_engine(served, None), with_eos())
+        ge_spec, _ = _run(_engine(served, SpecConfig(k=4, draft_layers=1)),
+                          with_eos())
+        assert ge_spec == ge_plain
+        assert any(len(a) < len(b) for a, b in zip(ge_plain, g_plain))
+
+
+class TestRejectionSampling:
+    def test_self_draft_rejection_reproduces_plain_decode(self, served):
+        """Self-draft + coupled keys: p == q, every proposal survives the
+        rejection test, and the sampled stream equals plain decode."""
+        cfg, _ = served
+        kw = dict(temperature=1.2, top_k=8)
+        g_plain, _ = _run(_engine(served, None), _mixed_reqs(**kw))
+        spec = SpecConfig(k=3, draft_layers=cfg.n_layers,
+                          accept_mode="rejection")
+        g_spec, st = _run(_engine(served, spec), _mixed_reqs(**kw))
+        assert g_spec == g_plain
+        assert st["spec_accept_mode"] == "rejection"
+
+    def test_rejection_preserves_target_distribution(self):
+        """The acceptance math itself, on synthetic p/q over a tiny
+        vocab: the committed-token distribution at the first position
+        matches sampling from p directly (total variation < 2%)."""
+        V, N = 8, 20_000
+        rng = np.random.default_rng(0)
+        p_row = rng.dirichlet(np.ones(V)).astype(np.float32)
+        q_row = rng.dirichlet(np.ones(V)).astype(np.float32)
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(N, dtype=jnp.uint32))
+        n_gen = jnp.zeros((N,), jnp.int32)
+        n_draft = jnp.full((N,), 1, jnp.int32)
+        # draft proposes from q with the coupled step key; the target's
+        # own sample (bonus path) comes from p with the same key
+        from repro.serve.sampling import fold_step
+        step0 = fold_step(keys, n_gen)
+        draft = jax.vmap(lambda kk: jax.random.categorical(
+            kk, jnp.log(q_row)))(step0).astype(jnp.int32)[:, None]
+        target = jax.vmap(lambda kk: jax.random.categorical(
+            kk, jnp.log(p_row)))(step0).astype(jnp.int32)[:, None]
+        target = jnp.concatenate([target, target], axis=1)   # (N, k+1=2)
+        q = jnp.broadcast_to(q_row, (N, 1, V))
+        p = jnp.broadcast_to(p_row, (N, 2, V))
+        n_acc, committed = jax.jit(accept_rejection)(
+            draft, q, p, target, keys, n_gen, n_draft)
+        first = np.asarray(committed[:, 0])
+        emp = np.bincount(first, minlength=V) / N
+        tv = 0.5 * np.abs(emp - p_row).sum()
+        assert tv < 0.02, f"total variation {tv:.3f} vs target p"
+        acc = float(np.mean(np.asarray(n_acc) > 0))
+        expected_acc = np.minimum(p_row, q_row).sum()
+        assert abs(acc - expected_acc) < 0.02
+
+
+class TestRollbackAccounting:
+    def test_written_and_trim_track_accepted_extent(self, served):
+        """After every spec step, `_written` equals the device counters
+        and the slot owns exactly the blocks covering it (the wave's
+        over-allocation was trimmed)."""
+        cfg, _ = served
+        eng = _engine(served, SpecConfig(k=3, draft_layers=1))
+        _sabotage(eng, cfg)             # rejections -> real rollback
+        reqs = _mixed_reqs(n=3, temperature=1.5)
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(60):
+            eng.step()
+            n_gen = jax.device_get(eng.state["n_gen"])
+            pos = jax.device_get(eng.state["cache"]["position"])
+            for s, r in eng._slot_req.items():
+                w = len(r.prompt) + int(n_gen[s]) - 1
+                assert eng._written[s] == w == int(pos[s])
+                assert len(eng.alloc.owned(s)) == \
+                    eng.alloc.blocks_for_tokens(w)
+            eng.alloc.check()
+            if all(r.done for r in reqs):
+                break
+        assert all(r.done for r in reqs)
+
+    def test_finished_at_admission_residents_drain_and_do_not_skew_stats(
+            self, served):
+        """Requests that finish at prefill (max_new == 1) never enter a
+        wave: they must still be harvested (no hang when NO slot has
+        draft budget), and must not count as drafted/rolled-back or
+        subtract from the accepted total."""
+        eng = _engine(served, SpecConfig(k=3, draft_layers=1))
+        one = [_req(i, np.arange(6, dtype=np.int32) + i, max_new_tokens=1)
+               for i in range(3)]
+        g, st = _run(eng, one, max_steps=200)
+        assert [len(x) for x in g] == [1, 1, 1]
+        assert st["spec_drafted"] == st["spec_accepted"] == 0
+        # mixing a max_new=1 request into a normal workload leaves the
+        # accept rate of the real waves untouched
+        eng2 = _engine(served, SpecConfig(k=3, draft_layers=1))
+        reqs = _mixed_reqs(n=3) + [_req(9, np.arange(5, dtype=np.int32),
+                                        max_new_tokens=1)]
+        _, st2 = _run(eng2, reqs, max_steps=500)
+        assert st2["spec_accept_rate"] == 1.0
+
+    def test_stats_counters_consistent(self, served):
+        g, st = _run(_engine(served, SpecConfig(k=3, draft_layers=1)),
+                     _mixed_reqs())
+        assert st["spec_drafted"] == st["spec_accepted"] \
+            + st["spec_rolled_back"]
+        assert st["spec_waves"] > 0
+        assert st["spec_k"] == 3 and st["spec_draft_layers"] == 1
+        assert st["decode_block_mode"] == "spec"
+        # every committed token is counted exactly once
+        assert st["tokens_out"] == sum(len(x) for x in g)
+
+
+class TestDraftConstruction:
+    def test_make_draft_shares_embeddings_and_slices_layers(self, served):
+        cfg, params = served
+        dcfg, dparams = make_draft(cfg, params, SpecConfig(draft_layers=1))
+        assert dcfg.n_layers == 1
+        assert dparams["embed"] is params["embed"]          # shared HBM
+        assert dparams["head"] is params["head"]
+        lp = jax.tree.leaves(dparams["segments"][0])
+        lt = jax.tree.leaves(params["segments"][0])
+        assert all(a.shape[0] == 1 for a in lp)
+        assert all(np.array_equal(a, b[:1]) for a, b in zip(lp, lt))
+
+    def test_self_draft_is_the_target_verbatim(self, served):
+        cfg, params = served
+        dcfg, dparams = make_draft(
+            cfg, params, SpecConfig(draft_layers=cfg.n_layers))
+        assert dcfg is cfg and dparams is params
+
+    def test_spec_requires_paged_layout(self, served):
+        cfg, params = served
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(cfg, params, slots=2, cache_len=64,
+                        spec=SpecConfig(k=2))
+
+    def test_invalid_spec_config(self):
+        with pytest.raises(ValueError, match="k must be"):
+            SpecConfig(k=0)
+        with pytest.raises(ValueError, match="accept_mode"):
+            SpecConfig(accept_mode="maybe")
+
+
+class TestProbeAndScheduling:
+    def test_auto_probe_skipped_when_spec_enabled(self, served):
+        """decode_block='auto' with spec on: the spec loop owns step
+        granularity — no probe runs, no probe-cache entry is written,
+        and stats() reports the mode."""
+        before = dict(_PROBE_CACHE)
+        eng = _engine(served, SpecConfig(k=5, draft_layers=1),
+                      decode_block="auto")
+        assert _PROBE_CACHE == before           # nothing probed/cached
+        assert eng.decode_block == 6            # k + 1 per wave
+        assert eng.stats()["decode_block_mode"] == "spec"
+
+    def test_cross_wave_dedup_same_step_identical_prompts(self, served):
+        """Two identical prompts admitted in the same engine step: the
+        in-batch dedup keeps the second OUT of the first's cold wave, so
+        it prefix-hits the freshly registered blocks (admission loop
+        re-examines it the moment the first registers) and prefills only
+        the uncached tail instead of recomputing the shared content."""
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, 250, 40).astype(np.int32)
+        solo = _engine(served, None, slots=2, block_size=16, num_blocks=32)
+        ra = _req(0, prompt, max_new_tokens=6)
+        _run(solo, [ra])
+        eng = _engine(served, None, slots=2, block_size=16, num_blocks=32)
+        r1 = _req(1, prompt, max_new_tokens=6)
+        r2 = _req(2, prompt, max_new_tokens=6)
+        eng.submit(r1)
+        eng.submit(r2)
+        st = eng.run_until_drained()
+        assert r1.done and r2.done
+        # r2 reused r1's chain: only r1's 40 prompt tokens plus r2's
+        # 1-token uncached tail were ever prefilled (not 80)
+        assert st["prefix_hit_tokens"] == 39
+        assert st["prompt_tokens_prefilled"] == 41
+        assert r1.generated == r2.generated == ra.generated
+        assert eng.alloc.allocated_blocks == 0
+        eng.alloc.check()
+
+    def test_dedup_holds_follower_of_inflight_chunked_prefill(self, served):
+        """Two identical LONG prompts: the first admits as a chunked tail
+        job; the second is held while the job is in flight (instead of
+        chunk-prefilling the same windows concurrently) and maps the
+        registered chain once available."""
+        rng = np.random.default_rng(6)
+        prompt = rng.integers(0, 250, 60).astype(np.int32)
+        eng = _engine(served, None, slots=3, block_size=16, num_blocks=32,
+                      prefill_chunk=16, max_seq_len=96)
+        r1 = _req(1, prompt, max_new_tokens=5)
+        r2 = _req(2, prompt, max_new_tokens=5)
+        eng.submit(r1)
+        eng.submit(r2)
+        eng.step()                          # r1 -> tail job; r2 held
+        assert len(eng._tail_jobs) == 1
+        assert eng.scheduler.pending == 1   # r2 still queued
+        st = eng.run_until_drained()
+        assert r1.done and r2.done
+        assert st["prefix_hit_tokens"] > 0
+        assert r1.generated == r2.generated
+        # the shared content was computed once: well under 2x the prompt
+        assert st["prompt_tokens_prefilled"] < 2 * len(prompt)
+
+    def test_held_follower_does_not_block_strangers(self, served):
+        """The dedup hold applies to the held request only: unrelated
+        work behind it in FCFS order still admits the same step."""
+        rng = np.random.default_rng(8)
+        prompt = rng.integers(0, 250, 60).astype(np.int32)
+        eng = _engine(served, None, slots=3, block_size=16, num_blocks=48,
+                      prefill_chunk=16, max_seq_len=96)
+        r1 = _req(1, prompt, max_new_tokens=5)
+        r2 = _req(2, prompt, max_new_tokens=5)
+        stranger = _req(3, rng.integers(0, 250, 12), max_new_tokens=20)
+        for r in (r1, r2, stranger):
+            eng.submit(r)
+        eng.step()          # r1 -> tail job, r2 held, stranger admits
+        assert any(r is stranger for r in eng._slot_req.values())
+        assert eng.scheduler.pending == 1       # only r2 still queued
+        eng.run_until_drained()
+        assert r1.done and r2.done and stranger.done
+        assert r1.generated == r2.generated
