@@ -446,6 +446,193 @@ def spec_decode_bench(args, cfg, params) -> Dict:
     return out
 
 
+# --------------------------------------------------------------------------
+# Open-loop streaming: Poisson arrivals through the asyncio frontend
+# --------------------------------------------------------------------------
+
+ST_MAX_NEW = 16
+ST_REQUESTS = 24            # arrivals per rate (smoke shrinks via args)
+ST_RATE_FACTORS = (0.4, 3.0)   # x measured closed-loop capacity
+ST_MIN_DEADLINE_S = 0.3
+ST_LEN_LO = 4
+
+
+def heavy_tail_lens(rng, n: int, lo: int, hi: int) -> np.ndarray:
+    """Lognormal prompt lengths clipped to [lo, hi]: mostly short with a
+    long tail — the open-loop workload's length distribution."""
+    lens = rng.lognormal(mean=np.log(12.0), sigma=0.7, size=n)
+    return np.clip(lens.astype(np.int64), lo, hi)
+
+
+def make_stream_specs(n, cfg, hi: int):
+    """(prompt, submit-kwargs) pairs: heavy-tail lengths, alternating
+    greedy / sampled rows (both decode variants stay exercised). The
+    fixed seed makes every call return the identical workload — warmup
+    compiles exactly the admission shapes the timed runs use."""
+    rng = np.random.default_rng(5)
+    lens = heavy_tail_lens(rng, n, ST_LEN_LO, hi)
+    return [(rng.integers(0, cfg.vocab_size, lens[i]).astype(np.int32),
+             {"max_new_tokens": ST_MAX_NEW,
+              "temperature": 0.5 if i % 2 else 0.0,
+              "top_k": 4 if i % 2 else 0, "seed": i})
+            for i in range(n)]
+
+
+def streaming_bench(args, cfg, params) -> Dict:
+    """Open-loop serving through the asyncio frontend.
+
+    Three phases on one EDF + shed-load engine:
+
+    1. **parity** — the workload submitted all-at-once through
+       ``AsyncFrontend``, streamed tokens collected per request, then the
+       identical requests batch-drained on the reset engine: the streams
+       must be bit-identical (greedy and sampled rows). The phase also
+       calibrates closed-loop capacity (requests/s) and the TTFT
+       deadline for phase 2.
+    2. **rates** — Poisson arrivals (exponential inter-arrival gaps) at
+       ``ST_RATE_FACTORS`` x capacity, heavy-tail prompt lengths, every
+       request carrying the calibrated first-token deadline; the engine
+       sheds (rejects) requests predicted to miss. Reports goodput
+       (SLO-met requests/s), SLO-attainment %, and client-side
+       TTFT/TPOT percentiles per rate.
+
+    CI gates (ci.yml): ``token_parity`` true, and ``slo_attainment`` at
+    the lower rate >= 0.9.
+    """
+    import asyncio
+
+    from repro.serve.frontend import AsyncFrontend
+
+    n_req = 10 if args.smoke else ST_REQUESTS
+    slots = args.slots
+    cache_len = args.cache_len
+    hi = min(48, cache_len - ST_MAX_NEW - 1)
+    blocks_per = -(-cache_len // 16)
+    eng = ServeEngine(cfg, params, policy=args.policy, slots=slots,
+                      cache_len=cache_len, kv_layout="paged",
+                      block_size=16, num_blocks=slots * blocks_per + 4,
+                      max_seq_len=cache_len, decode_block=4,
+                      max_new_cap=max(32, ST_MAX_NEW),
+                      sched_policy="edf", slo_shed="reject")
+    specs = make_stream_specs(n_req, cfg, hi)
+
+    def reqs_of(specs):
+        return [Request(uid=i, prompt=p,
+                        max_new_tokens=kw["max_new_tokens"],
+                        temperature=kw["temperature"], top_k=kw["top_k"],
+                        seed=kw["seed"])
+                for i, (p, kw) in enumerate(specs)]
+
+    async def closed_loop_stream():
+        """All-at-once submission through the frontend; returns per-
+        request streamed tokens, wall seconds, engine ttft_p95."""
+        t0 = time.perf_counter()
+        async with AsyncFrontend(eng) as fe:
+            handles = [await fe.submit(p, **kw) for p, kw in specs]
+            outs = [await h.tokens() for h in handles]
+            stats = await fe.stats()
+        return outs, time.perf_counter() - t0, stats["ttft_p95_s"]
+
+    async def open_loop(rate_rps: float, deadline_ms: float, seed: int):
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        async with AsyncFrontend(eng) as fe:
+            handles = []
+            for p, kw in specs:
+                await asyncio.sleep(rng.exponential(1.0 / rate_rps))
+                handles.append(await fe.submit(
+                    p, deadline_ms=deadline_ms, **kw))
+            token_counts = [len(await h.tokens()) for h in handles]
+            stats = await fe.stats()
+        wall = time.perf_counter() - t0
+        dl_s = deadline_ms / 1e3
+        ttfts = [h.first_token_t - h.submit_t for h in handles
+                 if not h.shed and h.first_token_t is not None]
+        met = sum(1 for h in handles
+                  if not h.shed and h.first_token_t is not None
+                  and h.first_token_t - h.submit_t <= dl_s)
+        met_toks = sum(nt for h, nt in zip(handles, token_counts)
+                       if not h.shed and h.first_token_t is not None
+                       and h.first_token_t - h.submit_t <= dl_s)
+        tpots = [(h.finish_t - h.first_token_t) / (nt - 1)
+                 for h, nt in zip(handles, token_counts)
+                 if not h.shed and h.first_token_t is not None and nt > 1]
+        return {"arrival_rate_rps": rate_rps, "requests": len(handles),
+                "shed": sum(1 for h in handles if h.shed),
+                "slo_attainment": met / max(len(handles), 1),
+                "goodput_rps": met / max(wall, 1e-9),
+                "goodput_tok_s": met_toks / max(wall, 1e-9),
+                "ttft_p50_s": percentile(ttfts, 50),
+                "ttft_p95_s": percentile(ttfts, 95),
+                "tpot_p50_s": percentile(tpots, 50),
+                "tpot_p95_s": percentile(tpots, 95),
+                "wall_s": wall,
+                "requests_shed": stats["requests_shed"]}
+
+    async def bench():
+        # warmup: closed-loop batch drain compiles the full-wave admission
+        # shapes + both decode variants; the trickle pass then drains one
+        # request per distinct length bucket alone, compiling the
+        # single-admission (pad-1) shapes that Poisson arrivals hit but
+        # all-at-once submission never does
+        run_engine(eng, reqs_of(specs))
+        # (bucket, greedy?) keys the compiled admit/decode variants: a
+        # solo greedy admission runs the greedy-only kernels, a solo
+        # sampled one the sampling kernels — compile both per bucket
+        seen = set()
+        for i, (p, kw) in enumerate(specs):
+            key = (-(-len(p) // 16), kw["temperature"] <= 0.0)
+            if key in seen:
+                continue
+            seen.add(key)
+            run_engine(eng, reqs_of([(p, kw)]))
+        eng.reset()
+        # phase 1: streaming parity + capacity/deadline calibration
+        outs, wall, ttft_p95 = await closed_loop_stream()
+        eng.reset()
+        reqs = reqs_of(specs)
+        run_engine(eng, reqs)
+        parity = all(o == r.generated for o, r in zip(outs, reqs))
+        capacity_rps = n_req / max(wall, 1e-9)
+        deadline_ms = max(4.0 * ttft_p95, ST_MIN_DEADLINE_S) * 1e3
+        out: Dict = {
+            "workload": {"requests_per_rate": n_req, "slots": slots,
+                         "max_new": ST_MAX_NEW,
+                         "prompt_len_range": [ST_LEN_LO, int(hi)],
+                         "sched_policy": "edf", "slo_shed": "reject"},
+            "token_parity": bool(parity),
+            "capacity_rps": capacity_rps,
+            "deadline_ms": deadline_ms,
+            "rates": [],
+        }
+        print(f"streaming parity: {'OK' if parity else 'FAILED'} "
+              f"({n_req} requests); capacity {capacity_rps:.2f} req/s, "
+              f"deadline {deadline_ms:.0f} ms")
+        # phase 2: open-loop Poisson arrivals at each rate factor. One
+        # untimed pass per rate first: open-loop admission hits wave
+        # shapes (arrival-dependent pairings) that no closed-loop warmup
+        # can fully enumerate, and a mid-run XLA compile would bill
+        # seconds of stall to whichever request hit it
+        for i, factor in enumerate(ST_RATE_FACTORS):
+            eng.reset()
+            await open_loop(factor * capacity_rps, deadline_ms,
+                            seed=6 + i)
+            eng.reset()
+            r = await open_loop(factor * capacity_rps, deadline_ms,
+                                seed=6 + i)
+            r["rate_factor"] = factor
+            out["rates"].append(r)
+            print(f"open loop {factor:3.1f}x capacity "
+                  f"({r['arrival_rate_rps']:.2f} req/s): attainment "
+                  f"{r['slo_attainment'] * 100:5.1f}%, goodput "
+                  f"{r['goodput_rps']:.2f} req/s, TTFT p95 "
+                  f"{r['ttft_p95_s'] * 1e3:6.1f} ms, TPOT p50 "
+                  f"{r['tpot_p50_s'] * 1e3:5.1f} ms, {r['shed']} shed")
+        return out
+
+    return asyncio.run(bench())
+
+
 def run_engine(engine, reqs) -> Dict:
     for r in reqs:
         engine.submit(r)
@@ -483,6 +670,8 @@ def main():
                     help="skip the shared-prefix / preemption workload")
     ap.add_argument("--skip-spec", action="store_true",
                     help="skip the speculative-decoding workload")
+    ap.add_argument("--skip-streaming", action="store_true",
+                    help="skip the open-loop streaming workload")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
@@ -533,6 +722,8 @@ def main():
         result["warm_burst"] = warm_burst_bench(sp_args, cfg, params)
     if not args.skip_spec and paged_ok:
         result["spec_decode"] = spec_decode_bench(args, cfg, params)
+    if not args.skip_streaming and paged_ok:
+        result["streaming"] = streaming_bench(args, cfg, params)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -1,0 +1,124 @@
+"""Minimal streaming client for the serve HTTP endpoint (stdlib only).
+
+Start a server first, e.g.::
+
+    PYTHONPATH=src python -m repro.launch.serve \\
+        --arch qwen2.5-3b --kv-layout paged --http-port 8000
+
+then stream a completion (prompts are token-id lists — the repo serves
+models, it does not ship a tokenizer)::
+
+    python examples/stream_client.py --port 8000 \\
+        --prompt 11 42 7 99 --max-tokens 16 --stream
+
+or fetch the same thing non-streaming (one JSON body)::
+
+    python examples/stream_client.py --port 8000 --prompt 11 42 7 99
+
+The SSE wire format is one ``data: {json}`` line per drained token span
+(``decode_block`` granularity), a final span carrying ``finish_reason``,
+then ``data: [DONE]``. See ``docs/serving_api.md`` for the full
+protocol.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+
+
+async def stream_completion(host: str, port: int, payload: dict) -> list:
+    """POST /v1/completions with ``stream: true``; print each SSE span
+    as it arrives and return the collected token ids."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(dict(payload, stream=True)).encode()
+    writer.write(
+        f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
+        f"Content-Type: application/json\r\n"
+        f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    await writer.drain()
+
+    status = (await reader.readline()).decode().split()
+    if status[1] != "200":
+        raise RuntimeError(f"HTTP {status[1]}: {await reader.read()}")
+    while (await reader.readline()) not in (b"\r\n", b"\n"):
+        pass                                    # skip response headers
+
+    tokens: list = []
+    async for raw in reader:
+        line = raw.decode().strip()
+        if not line.startswith("data: "):
+            continue
+        data = line[len("data: "):]
+        if data == "[DONE]":
+            break
+        chunk = json.loads(data)
+        choice = chunk["choices"][0]
+        tokens.extend(choice["token_ids"])
+        print(f"  span={choice['token_ids']} "
+              f"finish_reason={choice['finish_reason']}")
+    writer.close()
+    await writer.wait_closed()
+    return tokens
+
+
+async def blocking_completion(host: str, port: int, payload: dict) -> dict:
+    """POST /v1/completions without streaming; return the parsed JSON."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(payload).encode()
+    writer.write(
+        f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
+        f"Content-Type: application/json\r\n"
+        f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    header, _, payload_bytes = raw.partition(b"\r\n\r\n")
+    status = header.split()[1].decode()
+    out = json.loads(payload_bytes)
+    if status != "200":
+        raise RuntimeError(f"HTTP {status}: {out}")
+    return out
+
+
+async def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--prompt", type=int, nargs="+", required=True,
+                    help="prompt as a list of int token ids")
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="first-token SLO; the server sheds/downgrades "
+                         "when it predicts a miss (engine slo_shed mode)")
+    ap.add_argument("--priority", type=int, default=None,
+                    help="EDF priority class (lower = more urgent)")
+    ap.add_argument("--stream", action="store_true",
+                    help="use SSE streaming instead of one JSON response")
+    args = ap.parse_args()
+
+    payload = {"prompt": args.prompt, "max_tokens": args.max_tokens,
+               "temperature": args.temperature, "top_k": args.top_k,
+               "seed": args.seed}
+    if args.deadline_ms is not None:
+        payload["deadline_ms"] = args.deadline_ms
+    if args.priority is not None:
+        payload["priority"] = args.priority
+
+    if args.stream:
+        tokens = await stream_completion(args.host, args.port, payload)
+        print(f"streamed {len(tokens)} tokens: {tokens}")
+    else:
+        out = await blocking_completion(args.host, args.port, payload)
+        choice = out["choices"][0]
+        print(f"finish_reason={choice['finish_reason']} "
+              f"usage={out['usage']}")
+        print(f"tokens: {choice['token_ids']}")
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

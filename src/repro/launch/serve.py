@@ -1,8 +1,17 @@
 """Batched quantized serving driver (continuous-batching engine v2).
 
-Loads (or initializes) a model, deploys it at the given precision, and runs
-a batch of synthetic requests through the slot-based ServeEngine: batched
-length-bucketed prefill, fully on-device decode chunks, pluggable scheduler.
+Loads (or initializes) a model, deploys it at the given precision, and
+drives the slot-based ServeEngine three ways:
+
+* default — closed-loop batch: submit every synthetic request up front,
+  drain, report throughput/TTFT.
+* ``--arrival-rate R`` — open-loop: Poisson arrivals at R req/s through
+  the asyncio frontend, optionally with a first-token SLO
+  (``--deadline-ms`` + ``--shed``), reporting SLO attainment and
+  goodput alongside the engine stats.
+* ``--http-port P`` — serve: start the OpenAI-style HTTP endpoint
+  (``/v1/completions`` with SSE streaming; see docs/serving_api.md) and
+  run until interrupted.
 """
 from __future__ import annotations
 
@@ -35,6 +44,85 @@ def build_requests(args, cfg) -> list:
     return reqs
 
 
+def run_open_loop(args, engine, cfg):
+    """Poisson arrivals at ``--arrival-rate`` req/s through the asyncio
+    frontend; returns (engine stats + SLO metrics, wall seconds).
+
+    Runs the workload twice: an untimed warmup pass (open-loop arrivals
+    hit XLA compile variants — small admission waves — that a batch
+    drain never triggers; a cold pass would blame multi-second compile
+    stalls on the SLO) and then the identical timed pass."""
+    import asyncio
+
+    from repro.serve.frontend import AsyncFrontend
+
+    deadline_ms = args.deadline_ms or None
+
+    async def one_pass():
+        rng = np.random.default_rng(1)
+        t0 = time.perf_counter()
+        async with AsyncFrontend(engine,
+                                 default_deadline_ms=deadline_ms) as fe:
+            handles = []
+            for req in build_requests(args, cfg):
+                await asyncio.sleep(rng.exponential(1.0 / args.arrival_rate))
+                handles.append(await fe.submit(
+                    req.prompt, max_new_tokens=req.max_new_tokens,
+                    temperature=req.temperature, top_k=req.top_k,
+                    seed=req.seed))
+            for h in handles:
+                await h.tokens()
+            stats = await fe.stats()
+        return handles, stats, time.perf_counter() - t0
+
+    async def go():
+        print("warmup pass (compiling open-loop admission variants)...")
+        await one_pass()
+        engine.reset()
+        handles, stats, wall = await one_pass()
+        shed = sum(1 for h in handles if h.shed)
+        ttfts = sorted(h.first_token_t - h.submit_t for h in handles
+                       if not h.shed and h.first_token_t is not None)
+        stats["arrival_rate_rps"] = args.arrival_rate
+        if deadline_ms is not None:
+            met = sum(1 for t in ttfts if t <= deadline_ms / 1e3)
+            stats["slo_attainment"] = met / max(len(handles), 1)
+            stats["goodput_rps"] = met / max(wall, 1e-9)
+            print(f"open loop @ {args.arrival_rate:.1f} req/s: "
+                  f"{met}/{len(handles)} met the {deadline_ms:.0f} ms "
+                  f"first-token SLO ({shed} shed), goodput "
+                  f"{stats['goodput_rps']:.2f} req/s")
+        else:
+            print(f"open loop @ {args.arrival_rate:.1f} req/s: "
+                  f"{len(handles)} served, {shed} shed")
+        return stats, wall
+
+    return asyncio.run(go())
+
+
+def run_http(args, engine):
+    """Serve the OpenAI-style HTTP endpoint until interrupted."""
+    import asyncio
+
+    from repro.serve.frontend import AsyncFrontend
+    from repro.serve.http import ServeHTTP
+
+    async def go():
+        async with AsyncFrontend(
+                engine, default_deadline_ms=args.deadline_ms or None) as fe:
+            async with ServeHTTP(fe, host=args.http_host,
+                                 port=args.http_port) as srv:
+                print(f"serving on http://{args.http_host}:{srv.port} "
+                      f"(POST /v1/completions, GET /v1/stats, /health; "
+                      f"Ctrl-C to stop)")
+                await srv.serve_forever()
+
+    try:
+        asyncio.run(go())
+    except KeyboardInterrupt:
+        print("\nshutting down")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -49,7 +137,13 @@ def main():
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--decode-block", default="8",
                     help="decode steps per compiled on-device chunk; "
-                         "'auto' probes decode-step latency at startup")
+                         "'auto' probes decode-step latency at startup. "
+                         "With speculative decoding active (the paged "
+                         "default — see --no-spec) the draft+verify wave "
+                         "owns step granularity instead: this knob is "
+                         "overridden to spec-k+1 and the 'auto' probe is "
+                         "skipped, so pass --no-spec to make it (or the "
+                         "probe) take effect")
     ap.add_argument("--kv-layout", default="dense",
                     choices=("dense", "paged"),
                     help="paged = block-table KV cache with free-block "
@@ -99,7 +193,31 @@ def main():
                          "own samples (output identical to plain decode); "
                          "'rejection' runs speculative rejection sampling "
                          "for temperature/top-k requests")
-    ap.add_argument("--sched", default="fcfs", choices=("fcfs", "sjf"))
+    ap.add_argument("--sched", default="fcfs",
+                    choices=("fcfs", "sjf", "edf"),
+                    help="admission order: arrival, shortest-prompt, or "
+                         "earliest-deadline-first within priority class "
+                         "(pair edf with --deadline-ms / --shed)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop mode: Poisson arrivals at this many "
+                         "requests/s through the asyncio frontend "
+                         "(0 = closed-loop batch, the default)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request first-token SLO in ms (open-loop / "
+                         "HTTP modes; 0 = no deadline). With --shed the "
+                         "engine rejects or downgrades requests predicted "
+                         "to miss it")
+    ap.add_argument("--shed", default="none",
+                    choices=("none", "reject", "downgrade"),
+                    help="SLO admission control when a queued request's "
+                         "predicted TTFT exceeds its deadline: drop it "
+                         "(reject) or clear its deadline and demote it "
+                         "behind on-time work (downgrade)")
+    ap.add_argument("--http-port", type=int, default=0,
+                    help="serve mode: bind the OpenAI-style HTTP endpoint "
+                         "(/v1/completions with SSE streaming) on this "
+                         "port and run until interrupted (0 = off)")
+    ap.add_argument("--http-host", default="127.0.0.1")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--bench-out", default="",
@@ -127,13 +245,19 @@ def main():
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
                          cache_len=args.cache_len,
                          decode_block=decode_block,
-                         sched_policy=args.sched,
+                         sched_policy=args.sched, slo_shed=args.shed,
                          max_new_cap=max(32, args.max_new), **kw)
-    for req in build_requests(args, cfg):
-        engine.submit(req)
-    t0 = time.perf_counter()
-    stats = engine.run_until_drained()
-    dt = time.perf_counter() - t0
+    if args.http_port:
+        run_http(args, engine)
+        return
+    if args.arrival_rate > 0:
+        stats, dt = run_open_loop(args, engine, cfg)
+    else:
+        for req in build_requests(args, cfg):
+            engine.submit(req)
+        t0 = time.perf_counter()
+        stats = engine.run_until_drained()
+        dt = time.perf_counter() - t0
     stats["wall_s"] = dt
     stats["tok_s"] = stats["tokens_out"] / max(dt, 1e-9)
     print(f"served {args.requests} requests in {dt:.2f}s: "

@@ -108,6 +108,14 @@ class BlockAllocator:
 
     # ---- accounting ----
     def blocks_for_tokens(self, n_tokens: int) -> int:
+        """Blocks covering ``n_tokens`` (ceil division, clamped at 0).
+
+        >>> alloc = BlockAllocator(8, 16, slots=2, table_len=4)
+        >>> alloc.blocks_for_tokens(17)
+        2
+        >>> alloc.blocks_for_tokens(0)
+        0
+        """
         return -(-max(n_tokens, 0) // self.block_size)
 
     @property

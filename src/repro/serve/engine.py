@@ -50,10 +50,20 @@ admission boundaries:
   swaps its quantized blocks to a host buffer (int8 payloads move 4x
   cheaper than fp32), requeues it, and restores it bit-exactly once the
   pool recovers — decode resumes mid-stream with identical tokens.
-* **Scheduler** (``serve.scheduler``) — pluggable FCFS / shortest-prompt
-  policies plus per-request TTFT/latency accounting; paged admission uses
-  its head-of-line ``admit_ok`` hook so big requests aren't starved, and
-  its ``pick_victim`` hook chooses preemption victims.
+* **Scheduler** (``serve.scheduler``) — pluggable FCFS / shortest-prompt /
+  EDF policies plus per-request TTFT/latency accounting; paged admission
+  uses its head-of-line ``admit_ok`` hook so big requests aren't starved,
+  and its ``pick_victim`` hook chooses preemption victims.
+* **Streaming + SLO-aware admission** — a request may carry an
+  ``on_tokens`` callback: freshly decoded spans drain incrementally from
+  ``_harvest`` at decode-chunk / spec-wave granularity (and at swap-out)
+  instead of only at finish. Requests may also carry a first-token
+  ``deadline_ms`` and a ``priority`` class: ``sched_policy="edf"``
+  admits earliest-deadline-first within priority, and ``slo_shed``
+  (``"reject"`` / ``"downgrade"``) drops or demotes queued requests
+  whose predicted TTFT — fitted from this engine's measured prefill and
+  decode rates — already misses their deadline. ``serve.frontend``
+  builds the asyncio host loop and the HTTP endpoint on these hooks.
 
 All per-slot cache state (int8 KV / recurrent) stays in one pytree so the
 decode chunk is a single compiled program regardless of slot occupancy;
@@ -65,7 +75,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +89,7 @@ from repro.models import (decode_step, init_cache, prefill, prefill_tail,
 from repro.serve.block_alloc import BlockAllocator, PoolDry
 from repro.serve.sampling import (TOP_K_CAP, fold_step, sample_tokens,
                                   token_probs)
-from repro.serve.scheduler import PREEMPT_POLICIES, Scheduler
+from repro.serve.scheduler import (PREEMPT_POLICIES, SHED_MODES, Scheduler)
 from repro.serve.spec import (SpecConfig, accept_exact, accept_rejection,
                               make_draft)
 
@@ -121,9 +131,19 @@ class Request:                          # prompt field breaks value __eq__
     temperature: float = 0.0            # <= 0: greedy
     top_k: int = 0                      # 0: no top-k filtering
     seed: int = 0
+    # --- SLO class (scheduler policy "edf" + engine slo_shed) ---
+    deadline_ms: Optional[float] = None  # first-token SLO, from submit
+    priority: int = 0                    # lower = more urgent (EDF class)
+    # --- streaming ---
+    # called as on_tokens(req, new_tokens, done) with each freshly
+    # decoded span (decode_block / spec-wave granularity) instead of only
+    # at finish; may fire from whatever thread steps the engine
+    on_tokens: Optional[Callable] = None
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    shed: bool = False                  # rejected by SLO admission control
     _arrival: int = 0                   # set by the scheduler
+    _streamed: int = 0                  # tokens already sent to on_tokens
 
 
 class ServeEngine:
@@ -142,6 +162,7 @@ class ServeEngine:
                  preempt: str = "last_admitted",
                  tail_batch: int = 0,
                  prefix_affinity: bool = True,
+                 slo_shed: str = "none",
                  spec: Optional[SpecConfig] = None):
         self.cfg = cfg
         self.params = params
@@ -201,6 +222,10 @@ class ServeEngine:
         self.prefix_affinity = prefix_affinity and self.prefix_cache
         self.admission = admission
         self.preempt = preempt
+        if slo_shed not in SHED_MODES:
+            raise ValueError(f"slo_shed must be one of {SHED_MODES}, "
+                             f"got {slo_shed!r}")
+        self.slo_shed = slo_shed
         self.spec = None
         if spec is not None:
             if not self._paged:
@@ -563,7 +588,17 @@ class ServeEngine:
         }
 
     def reset(self) -> None:
-        """Clear all serving state but keep compiled programs warm."""
+        """Clear all serving state but keep compiled programs warm.
+
+        Drops every queued / resident / swapped request, reinitializes
+        the cache pytree and the block allocator (paged), zeroes all
+        stats, and replaces the scheduler with a fresh one of the same
+        policy. Compiled programs and the ``decode_block="auto"`` probe
+        result survive, so a reset-and-rerun (the benchmark pattern)
+        pays no recompile. Requests submitted before the reset must not
+        be resubmitted to the old engine's allocator state — their
+        prefix-lookup memos are invalidated by an epoch bump.
+        """
         self.state = self._blank_state()
         # monotone epoch invalidates per-request lookup memos across
         # resets (an id()-based token could collide on address reuse)
@@ -581,7 +616,10 @@ class ServeEngine:
         self._seq = 0
         self._max_residents = 0
         self.scheduler = Scheduler(self.scheduler.policy)
-        self._host = {"decode_s": 0.0, "prefill_s": 0.0, "prefill_calls": 0,
+        self._pred_per_tok: Optional[float] = None   # fastest s/prompt-tok
+        self._pred_round_s: Optional[float] = None   # fastest decode round
+        self._host = {"decode_s": 0.0, "decode_rounds": 0,
+                      "prefill_s": 0.0, "prefill_calls": 0,
                       "prefill_tokens": 0, "prefill_chunks": 0,
                       "prompt_tokens": 0, "prefix_hit_tokens": 0,
                       "cow_copies": 0, "preemptions": 0,
@@ -599,6 +637,33 @@ class ServeEngine:
             for leaf in jax.tree.leaves(seg))
 
     def submit(self, req: Request) -> None:
+        """Enqueue one request for serving.
+
+        Args:
+            req: a :class:`Request`. ``prompt`` is a 1-D int32 token-id
+                array; ``max_new_tokens`` bounds generation (the first
+                token comes from prefill); ``temperature <= 0`` means
+                greedy and ``top_k == 0`` disables filtering;
+                ``deadline_ms`` / ``priority`` feed the ``edf``
+                scheduler policy and ``slo_shed`` admission control;
+                ``on_tokens`` (if set) receives every freshly decoded
+                span as ``on_tokens(req, tokens, done)``.
+
+        Returns:
+            None. The request is queued; the engine admits it on a later
+            :meth:`step`. Completion is signalled by ``req.done`` (tokens
+            in ``req.generated``), by the ``on_tokens`` callback, or by
+            ``req.shed`` if SLO admission control rejected it.
+
+        Raises:
+            ValueError: if the request can *never* be admitted on this
+                engine — ``max_new_tokens`` above ``max_new_cap``,
+                ``top_k`` above ``TOP_K_CAP``, or a token footprint
+                (``prompt + max_new_tokens - 1``) exceeding
+                ``max_seq_len`` / the block table / the pool (paged) or
+                ``cache_len`` (dense full-attention). The message names
+                the computed need and the knob to raise.
+        """
         if req.max_new_tokens > self.max_new_cap:
             raise ValueError(
                 f"max_new_tokens={req.max_new_tokens} exceeds this engine's "
@@ -644,7 +709,58 @@ class ServeEngine:
         n = len(self._slot_req) + len(self._tail_jobs)
         self._max_residents = max(self._max_residents, n)
 
+    # ------------------------------------------------------------------
+    # SLO-aware admission + streaming drain
+    # ------------------------------------------------------------------
+
+    def _predict_ttft_s(self, backlog_tokens: int) -> float:
+        """Estimate seconds until a queued request's first token given
+        ``backlog_tokens`` prompt tokens must prefill before it (requests
+        ahead in policy order plus its own prompt). Fitted from this
+        engine's own measured rates — prefill seconds per prompt token
+        plus one decode round (the wave in flight when it reaches the
+        head) — so the estimate tracks the deployment, not a constant.
+        Returns 0.0 until the engine has measured anything (a cold engine
+        never sheds blind). Rates are the *fastest* observed per call —
+        a min, not a mean — so the one-time XLA compile cost of each
+        program variant (seconds, folded into the first call's wall
+        time) can't masquerade as steady-state service time and shed the
+        whole queue on a freshly constructed engine."""
+        if self._pred_per_tok is None:
+            return 0.0
+        return (self._pred_per_tok * backlog_tokens
+                + (self._pred_round_s or 0.0))
+
+    def _note_rate(self, attr: str, value: float) -> None:
+        """Min-track a measured rate for the TTFT predictor."""
+        cur = getattr(self, attr)
+        setattr(self, attr, value if cur is None else min(cur, value))
+
+    def _shed_overdue(self) -> None:
+        """Shed-load pass before admission (``slo_shed != "none"``):
+        requests whose predicted TTFT already exceeds their deadline are
+        rejected (``req.shed = True``, stream closed with no tokens) or
+        downgraded to best-effort, per the engine's ``slo_shed`` mode."""
+        if self.slo_shed == "none" or not self.scheduler.pending:
+            return
+        for r in self.scheduler.shed_overdue(self._predict_ttft_s,
+                                             self.slo_shed):
+            r.shed = True
+            r.done = True
+            self._emit_stream(r, (), done=True)
+
+    @staticmethod
+    def _emit_stream(req, toks, done: bool) -> None:
+        """Deliver freshly decoded tokens to a streaming request's
+        ``on_tokens`` callback (no-op for non-streaming requests)."""
+        if req.on_tokens is not None:
+            req.on_tokens(req, list(toks), done)
+            req._streamed += len(toks)
+        elif done:
+            req._streamed = len(req.generated)
+
     def _admit(self) -> None:
+        self._shed_overdue()
         if self._paged:
             self._admit_paged()
             return
@@ -916,10 +1032,13 @@ class ServeEngine:
             self.state = self._admit_jit(self.params, self.state, *common,
                                          *tail)
         jax.block_until_ready(self.state["tokens"])
-        self._host["prefill_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._host["prefill_s"] += dt
         self._host["prefill_calls"] += 1
         self._host["prefill_tokens"] += n     # first token of each request
-        self._host["prompt_tokens"] += int(sum(len(r.prompt) for r in reqs))
+        wave_tokens = int(sum(len(r.prompt) for r in reqs))
+        self._host["prompt_tokens"] += wave_tokens
+        self._note_rate("_pred_per_tok", dt / max(wave_tokens, 1))
         self.scheduler.on_admitted(reqs)
         for s, r in zip(taken, reqs):
             self._slot_req[s] = r
@@ -996,7 +1115,9 @@ class ServeEngine:
                 rows.append(i)
         if not done:
             jax.block_until_ready(self.state["cache"]["position"])
-            self._host["prefill_s"] += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self._host["prefill_s"] += dt
+            self._note_rate("_pred_per_tok", dt / max(int(sum(lens)), 1))
             return
         reqs = [j["req"] for j in done]
         keys = jnp.asarray(np.stack(
@@ -1015,7 +1136,9 @@ class ServeEngine:
             jnp.asarray([r.max_new_tokens for r in reqs], jnp.int32),
             temp, top_k, keys)
         jax.block_until_ready(self.state["tokens"])
-        self._host["prefill_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._host["prefill_s"] += dt
+        self._note_rate("_pred_per_tok", dt / max(int(sum(lens)), 1))
         self._host["prefill_calls"] += 1
         self._host["prefill_tokens"] += len(done)
         self.scheduler.on_admitted(reqs)
@@ -1229,6 +1352,11 @@ class ServeEngine:
                    "n_gen": int(n_gen), "out": np.asarray(out_row),
                    "last": int(last), "key": np.asarray(key)}
             self.state["active"] = self.state["active"].at[slot].set(False)
+            # tokens decoded before preemption stream out now (the out
+            # row is already on the host); the stream resumes at the
+            # next harvest after restore — same tokens, same order
+            self._emit_stream(req, rec["out"][req._streamed:rec["n_gen"]],
+                              done=False)
         rec["payload"] = payload
         rec["bytes"] = nbytes
         self.alloc.release(slot)
@@ -1460,13 +1588,28 @@ class ServeEngine:
                 if act[s]:
                     self._written[s] = len(r.prompt) + int(n_gen[s]) - 1
         finished = [s for s in self._slot_req if not act[s]]
-        if not finished:
+        # incremental token drain: streaming residents surface the tokens
+        # decoded since the last harvest (decode_block / spec-wave
+        # granularity) without waiting for finish — their rows ride the
+        # same batched device_get as the finished slots' buffers
+        streaming = [s for s, r in self._slot_req.items()
+                     if act[s] and r.on_tokens is not None
+                     and int(n_gen[s]) > r._streamed]
+        fetch = finished + streaming
+        if not fetch:
             return
-        rows = jax.device_get(self.state["out"][np.asarray(finished)])
+        all_rows = jax.device_get(self.state["out"][np.asarray(fetch)])
+        rows = all_rows[:len(finished)]
+        for i, s in enumerate(streaming):
+            r = self._slot_req[s]
+            self._emit_stream(r, all_rows[len(finished) + i,
+                                          r._streamed:int(n_gen[s])],
+                              done=False)
         for i, s in enumerate(finished):
             req = self._slot_req.pop(s)
             req.generated = rows[i, :n_gen[s]].tolist()
             req.done = True
+            self._emit_stream(req, req.generated[req._streamed:], done=True)
             self.scheduler.on_finished(req)
             if self._paged:
                 if self.prefix_cache and req.generated:
@@ -1510,7 +1653,10 @@ class ServeEngine:
                 self.state = self._decode_jit(self.params, self.state,
                                               greedy_only)
                 self._harvest()           # device_get doubles as the sync
-            self._host["decode_s"] += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self._host["decode_s"] += dt
+            self._host["decode_rounds"] += 1
+            self._note_rate("_pred_round_s", dt)
 
     def _flush_partial(self) -> None:
         """Surface still-resident slots' tokens (budget-aborted drain):
@@ -1594,6 +1740,54 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def stats(self) -> Dict:
+        """Serving counters and latency stats (one host sync).
+
+        Every key, so bench parsers don't reverse-engineer them:
+
+        ==========================  =========================================
+        key                         meaning
+        ==========================  =========================================
+        tokens_out                  tokens returned to requests (first
+                                    prefill token + committed decode tokens)
+        decode_steps                device decode steps executed
+        decode_s / decode_step_s    wall seconds in decode / per device step
+        decode_rounds               engine steps that ran a decode chunk or
+                                    spec wave (the shed predictor's divisor)
+        prefill_calls               compiled prefill/tail-finish admissions
+        prefill_chunks              tail-wave rows advanced (batched chunks)
+        prompt_tokens_prefilled     prompt tokens actually computed (excludes
+                                    prefix-cache hits)
+        prefill_s                   wall seconds in prefill + tail waves
+        prefix_hit_tokens           prompt tokens served from the prefix
+                                    cache instead of being prefilled
+        prefix_lookups/_hit_blocks  prefix-index probes / whole blocks hit
+        prefix_cache_blocks         evictable blocks alive only in the index
+        prefix_evictions            indexed blocks reclaimed by allocation
+        cow_copies                  copy-on-write block clones
+        preemptions                 swap-outs (optimistic admission)
+        swap_out_bytes/_in_bytes    quantized bytes moved by swaps
+        swap_s                      wall seconds in swap gather/restore
+        max_residents               peak concurrently resident requests
+        cache_tokens_capacity       pool/stripe capacity in tokens
+        peak_cache_tokens/_bytes    peak occupancy in tokens / bytes
+        cache_bytes                 total cache allocation
+        decode_block(_mode)         chunk length and how it was chosen
+                                    ("fixed" / "auto" / "spec")
+        spec_waves/_drafted/        verify-waves run, draft tokens proposed
+        _accepted/_rolled_back      / accepted / rolled back (spec only)
+        spec_accept_rate            accepted / drafted (spec only)
+        spec_k/_draft_layers/       the resolved SpecConfig actually
+        _accept_mode                serving (spec only)
+        requests_finished           requests fully served
+        requests_shed               requests rejected by SLO shed-load
+        requests_downgraded         requests demoted to best-effort
+        ttft_p50_s/p95_s            submit -> first-token percentiles
+        latency_p50_s/p95_s         submit -> finish percentiles
+        ==========================  =========================================
+
+        Paged-only keys appear only with ``kv_layout="paged"``; spec-only
+        keys only when ``spec`` is configured.
+        """
         steps, committed = jax.device_get((self.state["steps"],
                                            self.state["committed"]))
         d = dict(self._host)

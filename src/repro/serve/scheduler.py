@@ -7,12 +7,23 @@ pluggable:
 * ``fcfs`` — first-come-first-served (arrival order)
 * ``sjf``  — shortest-prompt-first (minimizes mean TTFT under load; ties
   broken by arrival so it stays starvation-bounded for equal lengths)
+* ``edf``  — earliest-deadline-first **within priority class**: requests
+  order by ``(priority, absolute deadline, arrival)``. ``priority`` is an
+  int on the request (lower = more urgent, default 0); requests without a
+  deadline sort behind every deadlined request of the same class. The
+  SLO-aware policy for open-loop serving — pair it with
+  :meth:`Scheduler.shed_overdue` for shed-load behavior under overload.
 
 Batched prefill wants co-admitted prompts of similar length; ``select``
 therefore groups the policy-ordered head of the queue into one prefill
 bucket: padded engines take any lengths (bucketed up to a common padded
 length), exact-length engines (recurrent archs, where right-padding would
 corrupt the scan state) only take requests sharing the leader's length.
+
+Prefix-affinity grouping (``group_key`` / ``hot``) layers on top of any
+base policy, EDF included: the base order decides each group's rank via
+its first occurrence, then sharers of one cached chain admit
+back-to-back.
 """
 from __future__ import annotations
 
@@ -20,7 +31,11 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-POLICIES = ("fcfs", "sjf")
+POLICIES = ("fcfs", "sjf", "edf")
+SHED_MODES = ("none", "reject", "downgrade")
+# priority class a downgraded request lands in: behind every explicit
+# class, so on-time work always outranks work that already missed its SLO
+BEST_EFFORT_PRIORITY = 1 << 30
 PREEMPT_POLICIES = ("last_admitted", "longest_remaining")
 # how many non-head admissions may jump the policy head via hot-chain
 # affinity before grouping pauses and the head admits (starvation bound)
@@ -44,7 +59,13 @@ class RequestTiming:
 
 def percentile(xs: List[float], q: float) -> float:
     """Nearest-rank percentile — the one definition every serve stat uses
-    (benchmarks import this so seed/v2 numbers stay comparable)."""
+    (benchmarks import this so seed/v2 numbers stay comparable).
+
+    >>> percentile([0.4, 0.1, 0.3, 0.2], 50)
+    0.3
+    >>> percentile([], 95)
+    0.0
+    """
     if not xs:
         return 0.0
     ys = sorted(xs)
@@ -66,13 +87,25 @@ class Scheduler:
         self._seq = 0                            # arrival tiebreaker
         self._bypass_head = None     # policy head being jumped via hot
         self._bypass_count = 0       # non-head removals while it waits
+        self.shed_rejected = 0       # requests dropped by shed_overdue
+        self.shed_downgraded = 0     # requests demoted to best-effort
 
     # ---- queue ----
     def submit(self, req, now: Optional[float] = None) -> None:
+        """Enqueue ``req`` and start its latency clock.
+
+        Stamps the request's arrival order (the FCFS / tiebreak key), its
+        submit time, and — when the request carries a ``deadline_ms`` —
+        its *absolute* first-token deadline ``submit_t + deadline_ms/1e3``
+        (what EDF ordering and :meth:`shed_overdue` compare against).
+        ``now`` overrides the wall clock for deterministic tests.
+        """
         req._arrival = self._seq
         self._seq += 1
-        req._timing = RequestTiming(
-            submit_t=time.perf_counter() if now is None else now)
+        t = time.perf_counter() if now is None else now
+        req._timing = RequestTiming(submit_t=t)
+        dl = getattr(req, "deadline_ms", None)
+        req._deadline_t = None if dl is None else t + dl / 1e3
         self._timings.append(req._timing)
         self._queue.append(req)
 
@@ -80,11 +113,19 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
+    @staticmethod
+    def _edf_key(r):
+        dl = getattr(r, "_deadline_t", None)
+        return (getattr(r, "priority", 0),
+                dl if dl is not None else float("inf"), r._arrival)
+
     def _ordered(self, group_key=None, hot=(), skip=()) -> List:
         base = self._queue if not skip else \
             [r for r in self._queue if r not in skip]
         if self.policy == "sjf":
             base = sorted(base, key=lambda r: (len(r.prompt), r._arrival))
+        elif self.policy == "edf":
+            base = sorted(base, key=self._edf_key)
         else:
             base = list(base)
         if group_key is None:
@@ -136,6 +177,8 @@ class Scheduler:
         if self.policy == "sjf":
             return min(self._queue,
                        key=lambda r: (len(r.prompt), r._arrival))
+        if self.policy == "edf":
+            return min(self._queue, key=self._edf_key)
         return self._queue[0]
 
     def _note_removal(self, req, head) -> None:
@@ -195,6 +238,57 @@ class Scheduler:
             self._note_removal(head if head in batch else batch[0], head)
         return batch
 
+    # ---- SLO shed-load ----
+    def shed_overdue(self, predict_s, mode: str = "reject",
+                     now: Optional[float] = None) -> List:
+        """Shed queued requests whose first-token deadline is already
+        unreachable (SLO-aware admission control under overload).
+
+        Walks the queue in policy order accumulating the prefill work
+        queued *ahead* of each request; for every request with a
+        deadline, the predicted TTFT is ``elapsed-so-far +
+        predict_s(tokens_ahead + own prompt)`` where ``predict_s`` maps a
+        prompt-token backlog to estimated seconds until the first token
+        (the engine supplies one fitted from its measured prefill/decode
+        rates). A request predicted to miss is handled per ``mode``:
+
+        * ``"reject"``   — removed from the queue and returned; the
+          caller marks it shed and closes its stream. Serving capacity
+          is spent only on requests that can still meet their SLO
+          (goodput over throughput).
+        * ``"downgrade"`` — kept, but its deadline is cleared and its
+          priority drops to ``BEST_EFFORT_PRIORITY``: it still serves
+          eventually, ordered behind every on-time request, and is never
+          shed again (a cleared deadline can't re-trigger).
+
+        Deadline-less requests are never touched. Returns the list of
+        rejected requests (empty in ``downgrade`` mode).
+        """
+        if mode not in SHED_MODES:
+            raise ValueError(f"unknown shed mode {mode!r}; known: "
+                             f"{SHED_MODES}")
+        if mode == "none" or not self._queue:
+            return []
+        t = time.perf_counter() if now is None else now
+        shed: List = []
+        ahead = 0
+        for r in self._ordered():
+            work = ahead + len(r.prompt)
+            dl = getattr(r, "_deadline_t", None)
+            if dl is not None and t + predict_s(work) > dl:
+                if mode == "reject":
+                    shed.append(r)
+                    continue            # its work never joins the backlog
+                r._deadline_t = None
+                r.deadline_ms = None
+                r.priority = BEST_EFFORT_PRIORITY
+                self.shed_downgraded += 1
+            ahead = work
+        for r in shed:
+            self._queue.remove(r)
+            self.shed_rejected += 1
+        return shed
+
     # ---- preemption ----
     @staticmethod
     def pick_victim(candidates, mode: str = "last_admitted"):
@@ -229,10 +323,14 @@ class Scheduler:
         req._timing.finish_t = time.perf_counter() if now is None else now
 
     def stats(self) -> Dict[str, float]:
+        """Aggregate latency/SLO stats over every request ever submitted
+        (see ``ServeEngine.stats`` for the full key table)."""
         ttfts = [t.ttft for t in self._timings if t.ttft is not None]
         lats = [t.latency for t in self._timings if t.latency is not None]
         return {
             "requests_finished": len(lats),
+            "requests_shed": self.shed_rejected,
+            "requests_downgraded": self.shed_downgraded,
             "ttft_p50_s": percentile(ttfts, 50),
             "ttft_p95_s": percentile(ttfts, 95),
             "latency_p50_s": percentile(lats, 50),

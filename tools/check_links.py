@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Link-check the repo's markdown: every relative link/image target in
+``docs/*.md`` and ``README.md`` must exist on disk.
+
+External links (http/https/mailto) and pure in-page anchors are
+skipped — this guards against the docs drifting from the tree (renamed
+files, moved guides), which is exactly the failure mode a docs layer
+invites. Exits non-zero listing every dead link.
+
+Usage::
+
+    python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images: [text](target) / ![alt](target); reference-style
+# definitions: [label]: target
+_INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans — paths inside
+    them are examples, not links."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def check_file(md: Path, root: Path) -> list:
+    """Return [(target, resolved_path), ...] for every dead relative
+    link in ``md``."""
+    text = _strip_code(md.read_text())
+    targets = _INLINE.findall(text) + _REFDEF.findall(text)
+    dead = []
+    for t in targets:
+        if t.startswith(_SKIP):
+            continue
+        path = t.split("#", 1)[0]           # drop in-page anchors
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        # GitHub-relative CI badge paths like ../../actions/... point
+        # above the repo — only check targets that stay inside it
+        try:
+            resolved.relative_to(root.resolve())
+        except ValueError:
+            continue
+        if not resolved.exists():
+            dead.append((t, resolved))
+    return dead
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    files = sorted((root / "docs").glob("*.md")) + [root / "README.md"]
+    files = [f for f in files if f.exists()]
+    if not files:
+        print(f"no markdown found under {root}", file=sys.stderr)
+        return 2
+    bad = 0
+    for md in files:
+        for target, resolved in check_file(md, root):
+            print(f"{md}: dead link '{target}' -> {resolved}")
+            bad += 1
+    print(f"checked {len(files)} files: "
+          f"{'all links OK' if not bad else f'{bad} dead link(s)'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
