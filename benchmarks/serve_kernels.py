@@ -1,0 +1,224 @@
+"""Serve-kernel roofline: extend the training byte/FLOP model
+(``benchmarks/roofline.py``) to the serving hot-path kernels.
+
+For each kernel the bench records three byte counts at fixed smoke shapes:
+
+* ``ideal_bytes`` — the roofline floor: every *resident* operand byte read
+  once, every output byte written once (a perfect kernel walks only the
+  blocks ``lengths`` make visible)
+* ``kernel_bytes`` — the modeled HBM traffic of the current implementation,
+  term-by-term from its grid/tiling (documented inline against the kernel
+  source); padding, full-table walks, and per-head refetch all show up here
+* ``naive_bytes`` — the traffic of the implementation each kernel replaced
+  (per-query-head paged grid; two-pass gather + dequant), kept as the
+  regression yardstick
+
+and gates their ratios in CI: ``roofline_frac = ideal / kernel`` (how close
+the implementation sits to the floor) and ``win_vs_naive = naive / kernel``.
+These are pure arithmetic plus the *real* ``nbytes`` of freshly exported
+arrays (the w4a8 packed layout is measured from an actual
+``export_linear_w4`` result, so a packing regression — unpacked nibbles,
+blown-up scale dtype — moves the gated number), which makes the gate
+deterministic on any backend: kernel-traffic regressions are caught on the
+CPU CI runner, no TPU required. Wall-clock timings of the ops entry points
+ride along informationally (ref backend off-TPU — the path the CPU engine
+actually serves).
+
+Usage::
+
+    python benchmarks/serve_kernels.py [--out serve_kernels.json]
+                                       [--merge BENCH_serve.json]
+
+``--merge`` inserts the section into an existing serve-bench artifact under
+``"serve_kernels"`` (the CI gates read it from there).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qat import export_linear_w4, init_linear
+from repro.kernels.kvq_attn import ops as kvq
+from repro.kernels.w4a8.ops import w4a8_linear
+
+# Smoke shapes: one decode/verify wave of a small GQA model over a paged
+# int8 pool. Small enough to run in interpret mode, large enough that every
+# modeled term is nonzero.
+B, HKV, GROUP, D = 4, 2, 2, 64       # slots, kv heads, GQA group, head dim
+H = HKV * GROUP
+BS, T = 32, 8                        # pool block size, table length
+LENS = (200, 256, 120, 64)           # resident tokens per slot
+C = 5                                # spec verify window (k + 1)
+CP = -(-C // 8) * 8                  # sublane-padded window (ops.py)
+GP = -(-GROUP // 8) * 8              # sublane-padded GQA group (ops.py)
+M, KF, N = 8, 256, 512               # w4a8 matmul: tokens x d_in -> d_out
+
+BF16, INT8, F32 = 2, 1, 4
+
+# one pool block's HBM payload: int8 K + V tiles and their f32 scale rows
+BLOCK_BYTES = 2 * BS * D * INT8 + 2 * BS * F32
+RESIDENT_BLOCKS = sum(-(-ln // BS) for ln in LENS)
+
+
+def _timed(fn, *args, reps: int = 5):
+    out = jax.block_until_ready(fn(*args))          # compile + warm
+    best = math.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _pool(rng):
+    nb = B * T
+    k_pool = jnp.asarray(rng.integers(-127, 127, (nb, HKV, BS, D)), jnp.int8)
+    v_pool = jnp.asarray(rng.integers(-127, 127, (nb, HKV, BS, D)), jnp.int8)
+    s_k = jnp.asarray(rng.random((nb, HKV, BS)) * 0.02, jnp.float32)
+    s_v = jnp.asarray(rng.random((nb, HKV, BS)) * 0.02, jnp.float32)
+    tbl = jnp.asarray(rng.permutation(nb).reshape(B, T), jnp.int32)
+    lens = jnp.asarray(LENS, jnp.int32)
+    return k_pool, v_pool, s_k, s_v, tbl, lens
+
+
+def paged_decode_section(rng):
+    """Grouped-grid paged flash-decode (kernel.py ``_paged_kernel``)."""
+    k_pool, v_pool, s_k, s_v, tbl, lens = _pool(rng)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.bfloat16)
+    # floor: q/out once, each *resident* block read once per KV head (the
+    # pool holds BLOCK_BYTES per head per block)
+    ideal = 2 * B * H * D * BF16 + RESIDENT_BLOCKS * HKV * BLOCK_BYTES
+    # current kernel: grid (B, Hkv, T) — every table entry walked once per
+    # KV head (sentinels clamp, masked later), q/out tiles padded to Gp
+    # sublanes and held in VMEM across the T steps
+    kernel = (B * HKV * T * BLOCK_BYTES            # pool + scale tiles
+              + 2 * B * HKV * GP * D * BF16)       # padded q + out
+    # pre-rework kernel: grid (B, H, T) refetched every block per *query*
+    # head (GROUPx the pool traffic), 1-row q/out tiles
+    naive = B * H * T * BLOCK_BYTES + 2 * B * H * D * BF16
+    fn = jax.jit(lambda *a: kvq.kvq_paged_decode_attn(*a, use_pallas=False))
+    _, wall = _timed(fn, q, k_pool, v_pool, s_k, s_v, tbl, lens)
+    return {"ideal_bytes": ideal, "kernel_bytes": kernel,
+            "naive_bytes": naive,
+            "roofline_frac": ideal / kernel,
+            "win_vs_naive": naive / kernel,
+            "ref_wall_s": wall, "ref_gbps": kernel / wall / 1e9}
+
+
+def spec_verify_section(rng):
+    """Multi-query verify-wave kernel with C -> Cp sublane padding."""
+    k_pool, v_pool, s_k, s_v, tbl, lens0 = _pool(rng)
+    q = jnp.asarray(rng.standard_normal((B, C, H, D)), jnp.bfloat16)
+    lens = jnp.minimum(lens0[:, None] + jnp.arange(C)[None, :],
+                       T * BS).astype(jnp.int32)
+    ideal = 2 * B * C * H * D * BF16 + RESIDENT_BLOCKS * HKV * BLOCK_BYTES
+    # grid (B, H, T): blocks refetched per query head (the remaining known
+    # overhead — folding the GQA group in as the decode kernel now does is
+    # the next step); q/out padded C -> Cp
+    kernel = B * H * T * BLOCK_BYTES + 2 * B * CP * H * D * BF16
+    naive = kernel  # the rework changed sublane tiling, not byte counts
+    fn = jax.jit(lambda *a: kvq.kvq_spec_verify_attn(*a, use_pallas=False))
+    _, wall = _timed(fn, q, k_pool, v_pool, s_k, s_v, tbl, lens)
+    return {"ideal_bytes": ideal, "kernel_bytes": kernel,
+            "pad_overhead": CP / C,
+            "roofline_frac": ideal / kernel,
+            "ref_wall_s": wall, "ref_gbps": kernel / wall / 1e9}
+
+
+def history_gather_section(rng):
+    """Fused tail-wave gather-dequant vs the two-pass XLA gather."""
+    k_pool, _, s_k, _, tbl, _ = _pool(rng)
+    per_block_read = BS * D * INT8 + BS * F32
+    per_block_write = BS * D * F32
+    # fused kernel: one int8+scale read, one f32 write per gathered block
+    fused = B * HKV * T * (per_block_read + per_block_write)
+    # two-pass XLA path: gather materializes an int8 copy (+ scale copy) in
+    # HBM, then the dequant pass re-reads both and writes the f32 result
+    naive = fused + B * HKV * T * (2 * BS * D * INT8 + 2 * BS * F32)
+    fn = jax.jit(lambda *a: kvq.gather_dequant_paged_kv(*a,
+                                                        use_pallas=False))
+    _, wall = _timed(fn, k_pool, s_k, tbl)
+    return {"fused_bytes": fused, "naive_bytes": naive,
+            "win_vs_naive": naive / fused,
+            "ref_wall_s": wall, "ref_gbps": fused / wall / 1e9}
+
+
+def w4a8_section(rng):
+    """Packed-int4-weight matmul: weight traffic measured from a real
+    export, not a formula — a layout regression changes the gated ratio."""
+    key = jax.random.PRNGKey(3)
+    lin = init_linear(key, KF, N, bias=True)
+    exp = export_linear_w4(lin, trained_bits=4)
+    packed = sum(int(v.size) * v.dtype.itemsize for v in exp.values())
+    bf16_w = KF * N * BF16 + N * BF16                 # w + b
+    x = jnp.asarray(rng.standard_normal((M, KF)), jnp.bfloat16)
+    ideal = (M * KF * INT8 + M * F32                  # int8 acts + scales
+             + packed + M * N * BF16)                 # weights + output
+    fn = jax.jit(lambda xx: w4a8_linear(xx, exp, use_pallas=False))
+    _, wall = _timed(fn, x)
+    return {"packed_weight_bytes": packed, "bf16_weight_bytes": bf16_w,
+            "weight_traffic_ratio": packed / bf16_w,
+            "ideal_bytes": ideal,
+            "ref_wall_s": wall, "ref_gbps": ideal / wall / 1e9}
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {
+        "shapes": {"slots": B, "kv_heads": HKV, "gqa_group": GROUP,
+                   "head_dim": D, "block_size": BS, "table_len": T,
+                   "lengths": list(LENS), "verify_window": C,
+                   "w4a8_mkn": [M, KF, N]},
+        "paged_decode": paged_decode_section(rng),
+        "spec_verify": spec_verify_section(rng),
+        "history_gather": history_gather_section(rng),
+        "w4a8_matmul": w4a8_section(rng),
+        # int8 cache + per-token scales vs a bf16 cache, per block
+        "kv_cache_traffic_ratio": BLOCK_BYTES / (2 * BS * D * BF16),
+    }
+    for name in ("paged_decode", "spec_verify", "history_gather",
+                 "w4a8_matmul"):
+        s = out[name]
+        frac = s.get("roofline_frac")
+        win = s.get("win_vs_naive")
+        bits = [f"{name}:"]
+        if frac is not None:
+            bits.append(f"roofline frac {frac:.2f}")
+        if win is not None:
+            bits.append(f"{win:.2f}x vs naive")
+        bits.append(f"ref {s['ref_wall_s'] * 1e3:.2f} ms "
+                    f"({s['ref_gbps']:.2f} GB/s modeled)")
+        print("  ".join(bits))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="serve_kernels.json",
+                    help="standalone artifact path ('' to skip)")
+    ap.add_argument("--merge", default="",
+                    help="existing BENCH_serve.json to insert the "
+                         "'serve_kernels' section into")
+    args = ap.parse_args()
+    section = run()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(section, f, indent=2)
+        print(f"wrote {args.out}")
+    if args.merge:
+        with open(args.merge) as f:
+            bench = json.load(f)
+        bench["serve_kernels"] = section
+        with open(args.merge, "w") as f:
+            json.dump(bench, f, indent=2)
+        print(f"merged serve_kernels into {args.merge}")
+
+
+if __name__ == "__main__":
+    main()

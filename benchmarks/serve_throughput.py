@@ -457,6 +457,75 @@ ST_MIN_DEADLINE_S = 0.3
 ST_LEN_LO = 4
 
 
+def weights_bench(args, cfg, params) -> Dict:
+    """Packed-int4 weight serving (``weights_layout="w4a8"``) vs bf16 at an
+    identical paged workload.
+
+    The win being claimed is weight-HBM streaming: the packed layout reads
+    ~0.28x the weight bytes per forward (int4 nibbles + f32 per-channel
+    scales vs bf16), which on real accelerators is the dominant memory term
+    of low-batch decode. On CPU smoke hardware the engines are
+    dispatch-bound, so the CI gate is *parity* (w4a8 >= 0.95x bf16 tok/s:
+    the packed path must not cost throughput where its byte win can't
+    show), plus the byte accounting itself from the engine's stats. Both
+    engines serve greedy, and the w4a8 stream is checked identical between
+    its Pallas and XLA-ref backends elsewhere (tests); here bf16 vs w4a8
+    streams legitimately differ (different arithmetic)."""
+    def engine(layout):
+        # decode_block="auto": each layout gets its probed optimum (the
+        # probe memo is keyed on weights_layout), so the parity gate
+        # compares production configurations instead of a block size tuned
+        # for neither
+        return ServeEngine(cfg, params, policy=args.policy,
+                           slots=args.slots, cache_len=args.cache_len,
+                           kv_layout="paged", block_size=16,
+                           decode_block="auto",
+                           max_new_cap=max(32, args.max_new),
+                           weights_layout=layout)
+
+    # the parity gate rides wall-clock tok/s, so the workload must be long
+    # enough that host-scheduler noise stays well under the gate margin —
+    # stretch the smoke token count (~50 tokens -> ~400) rather than trust
+    # a 15 ms measurement
+    wargs = argparse.Namespace(**vars(args))
+    wargs.requests = max(args.requests, 8)
+    wargs.max_new = max(args.max_new, 32)
+
+    out: Dict = {}
+    keys = ["tok_s", "wall_s", "tokens_out", "decode_steps",
+            "decode_step_s", "weights_layout", "packed_weight_bytes",
+            "weight_hbm_saved_bytes"]
+    engines = {layout: engine(layout) for layout in ("bf16", "w4a8")}
+    best: Dict = {layout: None for layout in engines}
+    for eng in engines.values():
+        run_engine(eng, make_requests(wargs, cfg))           # warmup
+    # best-of-4 with the layouts interleaved per round: a slow window on a
+    # shared CI host then penalizes both engines instead of whichever one
+    # happened to be measured during it — the tok_s ratio is the gated
+    # quantity, so noise that cancels is noise removed
+    for _ in range(4):
+        for layout, eng in engines.items():
+            eng.reset()
+            reqs = make_requests(wargs, cfg)
+            s = run_engine(eng, reqs)
+            assert all(r.done for r in reqs), "weights bench stalled"
+            if best[layout] is None or s["tok_s"] > best[layout]["tok_s"]:
+                best[layout] = s
+    for layout, stats in best.items():
+        out[layout] = {k: stats[k] for k in keys}
+        print(f"{layout:5s} weights: {stats['tok_s']:8.1f} tok/s, "
+              f"{stats['packed_weight_bytes'] / 1e3:.0f} KB packed, "
+              f"{stats['weight_hbm_saved_bytes'] / 1e3:.0f} KB saved")
+    out["tok_s_ratio"] = out["w4a8"]["tok_s"] / max(out["bf16"]["tok_s"],
+                                                    1e-9)
+    saved = out["w4a8"]["weight_hbm_saved_bytes"]
+    packed = out["w4a8"]["packed_weight_bytes"]
+    out["weight_bytes_ratio"] = packed / max(packed + saved, 1)
+    print(f"w4a8 weights: {out['tok_s_ratio']:.2f}x tok/s at "
+          f"{out['weight_bytes_ratio']:.2f}x the weight HBM bytes")
+    return out
+
+
 def heavy_tail_lens(rng, n: int, lo: int, hi: int) -> np.ndarray:
     """Lognormal prompt lengths clipped to [lo, hi]: mostly short with a
     long tail — the open-loop workload's length distribution."""
@@ -672,6 +741,8 @@ def main():
                     help="skip the speculative-decoding workload")
     ap.add_argument("--skip-streaming", action="store_true",
                     help="skip the open-loop streaming workload")
+    ap.add_argument("--skip-weights", action="store_true",
+                    help="skip the w4a8-vs-bf16 weight-layout comparison")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
@@ -724,6 +795,8 @@ def main():
         result["spec_decode"] = spec_decode_bench(args, cfg, params)
     if not args.skip_streaming and paged_ok:
         result["streaming"] = streaming_bench(args, cfg, params)
+    if not args.skip_weights and paged_ok:
+        result["weights_w4a8"] = weights_bench(args, cfg, params)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from repro.core import calibration as calib
 from repro.core.precision import PrecisionPolicy, parse_policy
 from repro.core.quantizer import (dynamic_fake_quant, lsq_fake_quant,
-                                  pack_int4, quantize_to_int,
+                                  pack_int4, quantize_to_int, unpack_int4,
                                   weight_scale_shape)
 
 # Param-dict keys holding quantizer step sizes
@@ -56,6 +56,11 @@ class QuantCtx:
     #                  "seq" (sequence-parallel attention, replicate K/V)
     attn_shard_mode: str = ""
     batch_axes: tuple = ()
+    # Serving weight layout: "bf16" keeps fake-quant einsums on bf16 params;
+    # "w4a8" routes every qlinear through the packed-int4 x int8 matmul
+    # (requires attach_w4a8_exports on the served tree — strict, no fallback).
+    weights_layout: str = "bf16"
+    w4a8_backend: str = "auto"           # auto | pallas | ref
 
     @property
     def off(self) -> bool:
@@ -73,12 +78,15 @@ class QuantCtx:
 
 def make_ctx(policy: str | PrecisionPolicy, mode: str = "train",
              act_calib_method: str = "quantile",
-             attn_shard_mode: str = "", batch_axes: tuple = ()) -> QuantCtx:
+             attn_shard_mode: str = "", batch_axes: tuple = (),
+             weights_layout: str = "bf16",
+             w4a8_backend: str = "auto") -> QuantCtx:
     if isinstance(policy, str):
         policy = parse_policy(policy)
     return QuantCtx(policy=policy, mode=mode,
                     act_calib_method=act_calib_method,
-                    attn_shard_mode=attn_shard_mode, batch_axes=batch_axes)
+                    attn_shard_mode=attn_shard_mode, batch_axes=batch_axes,
+                    weights_layout=weights_layout, w4a8_backend=w4a8_backend)
 
 
 # --------------------------------------------------------------------------
@@ -138,13 +146,44 @@ def qlinear(ctx: QuantCtx, x: jnp.ndarray, p: Dict[str, Any],
 
     ``act_bits``/``weight_bits`` override the body policy for special sites
     (head: 8/8; router: 8/8).
+
+    Under ``weights_layout="w4a8"`` the matmul instead consumes the packed
+    int4 export attached next to this linear (see ``attach_w4a8_exports``)
+    with per-token dynamic int8 activations — real integer arithmetic, not
+    fake-quant. Missing exports raise: a silent bf16 fallback would defeat
+    the whole point of the layout (weight-HBM streaming).
     """
+    if ctx.weights_layout == "w4a8" and ctx.mode != "calib" and not ctx.off:
+        exp = p.get("w4a8")
+        if exp is None:
+            raise ValueError(
+                "weights_layout='w4a8' but this linear carries no packed "
+                "export; run qat.attach_w4a8_exports(params, policy) on the "
+                "served tree (keys present: %s)" % sorted(p.keys()))
+        return w4a8_qlinear(ctx, x, exp)
     xq = quantize_act(ctx, x, p, "s_in", col, bits=act_bits)
     wq = quantize_weight_p(ctx, p, bits=weight_bits)
     y = jnp.einsum("...i,io->...o", xq, wq)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
+
+
+def w4a8_use_pallas(ctx: QuantCtx) -> bool:
+    """Backend pick for the packed matmul: Pallas on TPU, XLA ref elsewhere
+    (``w4a8_backend`` forces either; off-TPU "pallas" runs interpret mode)."""
+    if ctx.w4a8_backend == "pallas":
+        return True
+    if ctx.w4a8_backend == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def w4a8_qlinear(ctx: QuantCtx, x: jnp.ndarray, exp: Dict[str, Any]) -> jnp.ndarray:
+    """Packed-int4-weight x dynamic-int8-activation linear (serve hot path)."""
+    from repro.kernels.w4a8.ops import w4a8_linear
+    return w4a8_linear(x, exp, out_dtype=x.dtype,
+                       use_pallas=w4a8_use_pallas(ctx))
 
 
 def cache_dtype(ctx: QuantCtx):
@@ -314,3 +353,167 @@ def export_linear_int(p: Dict[str, Any], weight_bits: int) -> Dict[str, Any]:
     if "s_in" in p:
         out["s_in"] = p["s_in"].astype(jnp.float32)
     return out
+
+
+def export_linear_w4(p: Dict[str, Any], trained_bits: int = 4) -> Dict[str, Any]:
+    """Pack one linear into the serve-path int4 layout.
+
+    Returns ``{"wq": (d_out, d_in/2) uint8, "s_w": f32 per-out-channel,
+    ["b"]}`` — exactly what ``kernels.w4a8.ops.w4a8_linear`` consumes. Two
+    scale fixups happen here rather than at load time:
+
+    * a site trained at ``trained_bits > 4`` (the 8-bit head) is re-gridded
+      onto the int4 lattice: ``s4 = s_trained * (q_max(trained) / 7)``
+    * uncalibrated placeholder scales (``init_linear``'s all-ones) would
+      quantize real weights to all-zeros, so exactly-1.0 channels fall back
+      to per-channel absmax / 7
+
+    No Python-bool leaves (``export_linear_int``'s ``"packed"``): the export
+    rides the param pytree through ``jax.jit`` / ``lax.scan``, where a bool
+    leaf would become a tracer.
+    """
+    from repro.core.quantizer import qbounds
+    w = p["w"]
+    if w.shape[-2] % 2:
+        raise ValueError(f"int4 packing needs even d_in, got {w.shape[-2]}")
+    raw = p["s_w"].astype(jnp.float32)
+    qp_t = qbounds(trained_bits)[1]
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    s4 = jnp.where(raw == 1.0, jnp.maximum(absmax / 7.0, 1e-9),
+                   raw * (qp_t / 7.0))
+    q = quantize_to_int(w, s4, 4)
+    out = {"wq": pack_int4(jnp.swapaxes(q, -1, -2)), "s_w": s4}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def attach_w4a8_exports(params, policy: PrecisionPolicy):
+    """Attach a packed ``"w4a8"`` export inside every served linear dict.
+
+    Returns a new tree (input untouched). Walk rules mirror
+    :func:`calibrate_weight_scales`:
+
+    * any dict with ``w``/``s_w`` siblings is a linear — body sites pack at
+      ``policy.weight_bits``'s lattice (re-gridded to int4)
+    * MoE expert banks (``wg``/``wu``/``wd`` next to a ``router``) are
+      skipped: ``_expert_linear`` batches over the expert axis with its own
+      einsum and has no packed kernel — only the router is exported
+    * the head packs at ``policy.head_bits``; when embeddings are tied it has
+      no ``w`` and exports from the transposed embedding table
+
+    Scan-stacked segment linears keep their leading ``(rep,)`` axis on
+    ``wq``/``s_w``, so exports slice per-layer inside ``lax.scan`` exactly
+    like the weights they shadow.
+    """
+    if not policy.enabled:
+        raise ValueError("w4a8 export needs a quantized policy "
+                         f"(got {policy.name})")
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            moe = "router" in tree
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, dict) and "w" in v and "s_w" in v:
+                    if moe and k in ("wg", "wu", "wd", "w1", "w2"):
+                        out[k] = v
+                        continue
+                    nv = dict(v)
+                    nv["w4a8"] = export_linear_w4(v, policy.weight_bits)
+                    out[k] = nv
+                elif isinstance(v, (dict, list, tuple)):
+                    out[k] = walk(v)
+                else:
+                    out[k] = v
+            return out
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    out = walk(params)
+    if isinstance(out, dict) and "head" in out and "s_w" in out["head"]:
+        head = dict(out["head"])
+        hp = {"w": head["w"] if "w" in head else out["embed"]["w"].T,
+              "s_w": head["s_w"]}
+        if "b" in head:
+            hp["b"] = head["b"]
+        head["w4a8"] = export_linear_w4(hp, policy.head_bits)
+        out["head"] = head
+    return out
+
+
+def attach_w4a8_ref_planes(params):
+    """Cache each export's unpacked ``(d_in, d_out)`` int8 plane as
+    ``w4a8["wf"]`` — the XLA-ref backend's decode-time weight form.
+
+    The Pallas kernel unpacks nibbles in-registers per tile, which is free
+    on TPU; XLA:CPU cannot fuse the unpack into its BLAS gemm, so without
+    this cache the ref serve path re-materializes the unpacked matrix on
+    every decode step — measurably slower than the bf16 fake-quant path it
+    replaces. Unpacking once at engine construction restores parity. The
+    plane is derived purely from ``wq`` (bf16 ``w`` stays unread: the NaN-
+    poison lint still binds), costs half the bytes of the bf16 weights it
+    shadows, and feeds the exact same integer gemm, so ref results stay
+    bit-identical to Pallas. Call only when serving with the ref backend —
+    a TPU engine never needs it.
+    """
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k == "w4a8" and isinstance(v, dict) and "wq" in v:
+                    nv = dict(v)
+                    nv["wf"] = jnp.swapaxes(unpack_int4(v["wq"]), -1, -2)
+                    out[k] = nv
+                elif isinstance(v, (dict, list, tuple)):
+                    out[k] = walk(v)
+                else:
+                    out[k] = v
+            return out
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    return walk(params)
+
+
+def w4a8_weight_bytes(params) -> Dict[str, int]:
+    """HBM weight-streaming accounting for an export-attached tree.
+
+    ``packed``: bytes the w4a8 serve path reads per full forward (wq + s_w +
+    b of every export); ``replaced``: bytes the bf16 layout would have
+    streamed for the same matmuls (tied head counts the embedding table —
+    the logits matmul reads it every step either way). The ``wf`` ref-
+    backend plane is excluded: it is a CPU decode cache, not part of the
+    streamed packed layout.
+    """
+    packed = replaced = 0
+
+    def walk(tree):
+        nonlocal packed, replaced
+        if isinstance(tree, dict):
+            if "w4a8" in tree:
+                for key, leaf in tree["w4a8"].items():
+                    if key == "wf":
+                        continue
+                    packed += int(leaf.size) * leaf.dtype.itemsize
+                if "w" in tree:
+                    replaced += int(tree["w"].size) * tree["w"].dtype.itemsize
+                if "b" in tree:
+                    replaced += int(tree["b"].size) * tree["b"].dtype.itemsize
+            for v in tree.values():
+                if isinstance(v, (dict, list, tuple)):
+                    walk(v)
+        elif isinstance(tree, (list, tuple)):
+            for v in tree:
+                walk(v)
+
+    walk(params)
+    if (isinstance(params, dict) and "head" in params
+            and "w4a8" in params.get("head", {})
+            and "w" not in params["head"] and "embed" in params):
+        w = params["embed"]["w"]
+        replaced += int(w.size) * w.dtype.itemsize
+    return {"packed": packed, "replaced": replaced}

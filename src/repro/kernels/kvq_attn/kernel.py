@@ -77,33 +77,33 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, sk_ref, sv_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                      # (1, D)
+    q = q_ref[0, 0].astype(jnp.float32)                   # (Gp, D)
     k = k_ref[0, 0].astype(jnp.float32) * sk_ref[0, 0][..., None]  # (bs, D)
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale       # (1, bs)
+        preferred_element_type=jnp.float32) * scale       # (Gp, bs)
 
     # table entry t of this slot covers absolute positions [t*bs, (t+1)*bs);
     # sentinel entries gather a clamped block whose tokens all land here
     pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    valid = pos < len_ref[b]
+    valid = pos < len_ref[b]                              # (1, bs) -> bcast
     scores = jnp.where(valid, scores, _NEG)
 
-    m_prev = m_ref[0, 0]
-    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    m_prev = m_ref[...]                                   # (Gp, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
     corr = jnp.exp(m_prev - m_new)
-    p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)
-    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    p = jnp.exp(scores - m_new) * valid.astype(jnp.float32)  # (Gp, bs)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     v = v_ref[0, 0].astype(jnp.float32) * sv_ref[0, 0][..., None]  # (bs, D)
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)   # (1, D)
+                             preferred_element_type=jnp.float32)   # (Gp, D)
     acc_ref[...] = acc_ref[...] * corr + pv
-    m_ref[0, 0] = m_new
+    m_ref[...] = m_new
 
     @pl.when(t == nt - 1)
     def _final():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[0, 0], 1e-20)).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
 
 
 def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
@@ -117,40 +117,98 @@ def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
     tile DMA is issued. Sentinel entries must be clamped to NB-1 by the
     caller (ops.py); their scores are masked by ``lengths``.
 
-    q (B,H,D); pools (NB,Hkv,bs,D) int8; scales (NB,Hkv,bs) fp32;
-    block_tbl (B,T) int32 (clamped); lengths (B,) int32.
+    TPU tiling: the grid is (B, Hkv, T) — one step per *KV* head — and the
+    q operand arrives pre-grouped as (B, Hkv, Gp, D), all of a KV head's
+    query heads stacked on the sublane axis (ops.py pads the GQA group to
+    Gp, a multiple of 8 f32 sublanes). Each int8 (bs, D) K/V tile is
+    therefore fetched once per KV head instead of once per *query* head
+    (``group``x less pool HBM traffic), score/accumulator tiles are
+    (Gp, bs)/(Gp, D) full-sublane VREGs rather than 1-row slivers, and the
+    (1, bs) f32 scale tiles amortize the same way (lane-width at bs=128;
+    ops.py requires bs >= 32 on real hardware so every tile meets the int8
+    32-sublane minimum).
+
+    q (B,Hkv,Gp,D) pre-grouped; pools (NB,Hkv,bs,D) int8; scales
+    (NB,Hkv,bs) fp32; block_tbl (B,T) int32 (clamped); lengths (B,) int32.
+    Returns (B,Hkv,Gp,D); rows past the real group size are garbage and
+    sliced off by the wrapper.
     """
-    B, H, D = q.shape
-    Hkv, bs = k_pool.shape[1], k_pool.shape[2]
+    B, Hkv, Gp, D = q.shape
+    bs = k_pool.shape[2]
     T = block_tbl.shape[1]
-    group = H // Hkv
     scale = 1.0 / (D ** 0.5)
-    kv_ix = lambda b, h, t, tbl, lens: (tbl[b, t], h // group, 0, 0)
-    sc_ix = lambda b, h, t, tbl, lens: (tbl[b, t], h // group, 0)
+    kv_ix = lambda b, h, t, tbl, lens: (tbl[b, t], h, 0, 0)
+    sc_ix = lambda b, h, t, tbl, lens: (tbl[b, t], h, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                       # block_tbl, lengths
-        grid=(B, H, T),
+        grid=(B, Hkv, T),
         in_specs=[
-            pl.BlockSpec((1, 1, D), lambda b, h, t, tbl, lens: (b, h, 0)),
+            pl.BlockSpec((1, 1, Gp, D),
+                         lambda b, h, t, tbl, lens: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, D), kv_ix),      # k pool
             pl.BlockSpec((1, 1, bs, D), kv_ix),      # v pool
             pl.BlockSpec((1, 1, bs), sc_ix),         # s_k pool
             pl.BlockSpec((1, 1, bs), sc_ix),         # s_v pool
         ],
-        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, t, tbl, lens:
-                               (b, h, 0)),
+        out_specs=pl.BlockSpec((1, 1, Gp, D), lambda b, h, t, tbl, lens:
+                               (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),   # running max
-            pltpu.VMEM((1, 1), jnp.float32),   # running denom
-            pltpu.VMEM((1, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((Gp, 1), jnp.float32),  # running max
+            pltpu.VMEM((Gp, 1), jnp.float32),  # running denom
+            pltpu.VMEM((Gp, D), jnp.float32),  # output accumulator
         ],
     )
     return pl.pallas_call(
         functools.partial(_paged_kernel, bs=bs, nt=T, scale=scale),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, D), q.dtype),
         interpret=interpret,
     )(block_tbl, lengths, q, k_pool, v_pool, s_k, s_v)
+
+
+def _gather_dequant_kernel(tbl_ref, kq_ref, sk_ref, o_ref):
+    o_ref[0, 0, 0] = (kq_ref[0, 0].astype(jnp.float32)
+                      * sk_ref[0, 0][..., None])
+
+
+def gather_dequant_paged_kv(pool, s_pool, block_tbl, interpret: bool = True):
+    """Fused gather + dequant of each row's block-table extent.
+
+    The tail-wave history read: the XLA path gathers the int8 pool and the
+    scale pool separately, materializing an int8 copy of every history
+    block in HBM before a second dequantize pass re-reads it. Here one
+    grid step per (row, head, table entry) DMAs the (bs, D) int8 tile and
+    its (bs,) scale straight into VMEM and writes only the dequantized f32
+    tile back — the int8 intermediate never exists in HBM. Sentinel table
+    entries must be clamped by the caller (ops.py); callers mask their
+    positions exactly as they do for the XLA gather.
+
+    pool (NB, Hkv, bs, D) int8; s_pool (NB, Hkv, bs) f32; block_tbl (n, T)
+    int32 (clamped). Returns (n, Hkv, T*bs, D) f32 — identical layout and
+    bitwise-identical values to ``gather_paged_kv(pool).astype(f32) *
+    gather_paged_kv(s_pool)[..., None]``.
+    """
+    NB, Hkv, bs, D = pool.shape
+    n, T = block_tbl.shape
+    kv_ix = lambda r, h, t, tbl: (tbl[r, t], h, 0, 0)
+    sc_ix = lambda r, h, t, tbl: (tbl[r, t], h, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                       # block_tbl
+        grid=(n, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, D), kv_ix),
+            pl.BlockSpec((1, 1, bs), sc_ix),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bs, D),
+                               lambda r, h, t, tbl: (r, h, t, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, Hkv, T, bs, D), jnp.float32),
+        interpret=interpret,
+    )(block_tbl, pool, s_pool)
+    return out.reshape(n, Hkv, T * bs, D)
 
 
 def _spec_verify_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, sk_ref,

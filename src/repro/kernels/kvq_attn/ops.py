@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.kvq_attn import kernel as K
 from repro.kernels.kvq_attn.ref import (chunk_commit_ids, copy_pool_blocks_ref,
+                                        gather_paged_kv,
                                         kvq_decode_attn_ref,
                                         kvq_paged_decode_attn_ref,
                                         kvq_spec_verify_attn_ref,
@@ -77,6 +78,27 @@ def copy_pool_blocks(pool, src, dst,
     return out.reshape(pool.shape)
 
 
+def gather_dequant_paged_kv(pool, s_pool, block_tbl,
+                            use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Dequantized history gather for the batched tail/chunk prefill wave.
+
+    pool (NB, Hkv, bs, D) int8; s_pool (NB, Hkv, bs) fp32; block_tbl (n, T)
+    int32 (sentinels clamped here). Returns (n, Hkv, T*bs, D) f32. On TPU
+    the fused Pallas kernel dequantizes each gathered tile VMEM-locally (no
+    int8 intermediate in HBM); elsewhere the two-gather XLA reference runs
+    — bitwise-identical values either way.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return (gather_paged_kv(pool, block_tbl).astype(jnp.float32)
+                * gather_paged_kv(s_pool, block_tbl)[..., None])
+    nb = pool.shape[0]
+    tbl = jnp.minimum(block_tbl.astype(jnp.int32), nb - 1)
+    return K.gather_dequant_paged_kv(pool, s_pool.astype(jnp.float32), tbl,
+                                     interpret=_INTERPRET)
+
+
 def kvq_decode_attn(q, k_q, v_q, s_k, s_v, lengths,
                     use_pallas: bool = True) -> jnp.ndarray:
     """Decode attention over an integer cache; pads S to tile multiples.
@@ -116,11 +138,22 @@ def kvq_spec_verify_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
                                         block_tbl, lengths)
     nb = k_pool.shape[0]
     tbl = jnp.minimum(block_tbl.astype(jnp.int32), nb - 1)
-    return K.kvq_spec_verify_attn(q, k_pool, v_pool,
-                                  s_k.astype(jnp.float32),
-                                  s_v.astype(jnp.float32), tbl,
-                                  lengths.astype(jnp.int32),
-                                  interpret=_INTERPRET)
+    # pad the query-window axis to a full f32 sublane tile: C = k + 1 is
+    # small (2-16), and an unpadded C leaves the (C, bs) score tile and the
+    # (C, D) accumulator scratch on partial sublanes. Padded rows have q = 0
+    # and length 0, so every position masks out and they reduce to exact
+    # zeros (no NaN: the final divide clamps the denominator).
+    C = q.shape[1]
+    Cp = -(-C // 8) * 8
+    if Cp != C:
+        q = jnp.pad(q, ((0, 0), (0, Cp - C), (0, 0), (0, 0)))
+        lengths = jnp.pad(lengths, ((0, 0), (0, Cp - C)))
+    out = K.kvq_spec_verify_attn(q, k_pool, v_pool,
+                                 s_k.astype(jnp.float32),
+                                 s_v.astype(jnp.float32), tbl,
+                                 lengths.astype(jnp.int32),
+                                 interpret=_INTERPRET)
+    return out[:, :C] if Cp != C else out
 
 
 def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
@@ -130,14 +163,31 @@ def kvq_paged_decode_attn(q, k_pool, v_pool, s_k, s_v, block_tbl, lengths,
     q (B,H,D); k_pool/v_pool (NB,Hkv,bs,D) int8; s_k/s_v (NB,Hkv,bs) fp32;
     block_tbl (B,T) int32 (entries >= NB are unallocated sentinels, clamped
     here); lengths (B,) int32 tokens resident per slot.
+
+    The kernel grid runs per *KV* head with the GQA group stacked on the
+    q sublane axis (see kernel.py): q is regrouped (B, Hkv, group, D) and
+    the group padded to a multiple of 8 sublanes here. Real hardware also
+    needs the int8 (bs, D) K/V tiles to cover >= 32 sublanes, so bs < 32
+    falls back to the XLA reference off the interpreter (bitwise-identical
+    result; interpret mode still exercises the kernel at any bs so the
+    parity tests run everywhere).
     """
+    if use_pallas and not _INTERPRET and k_pool.shape[2] < 32:
+        use_pallas = False
     if not use_pallas:
         return kvq_paged_decode_attn_ref(q, k_pool, v_pool, s_k, s_v,
                                          block_tbl, lengths)
-    nb = k_pool.shape[0]
+    nb, Hkv = k_pool.shape[0], k_pool.shape[1]
+    B, H, D = q.shape
+    group = H // Hkv
+    Gp = -(-group // 8) * 8
+    qg = q.reshape(B, Hkv, group, D)   # head h -> (h // group, h % group)
+    if Gp != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - group), (0, 0)))
     tbl = jnp.minimum(block_tbl.astype(jnp.int32), nb - 1)
-    return K.kvq_paged_decode_attn(q, k_pool, v_pool,
-                                   s_k.astype(jnp.float32),
-                                   s_v.astype(jnp.float32), tbl,
-                                   lengths.astype(jnp.int32),
-                                   interpret=_INTERPRET)
+    out = K.kvq_paged_decode_attn(qg, k_pool, v_pool,
+                                  s_k.astype(jnp.float32),
+                                  s_v.astype(jnp.float32), tbl,
+                                  lengths.astype(jnp.int32),
+                                  interpret=_INTERPRET)
+    return out[:, :, :group].reshape(B, H, D)

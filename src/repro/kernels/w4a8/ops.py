@@ -22,13 +22,16 @@ def _pad_to(a, mults):
 
 
 def w4a8_matmul(x_q, w_packed, s_x, s_w, bias=None, out_dtype=jnp.bfloat16,
-                use_pallas: bool = True):
+                use_pallas: bool = True, w_unpacked=None):
     """Tile-padding wrapper. x_q (M,K) int8, w_packed (N,K/2) uint8,
-    s_x (M,1), s_w (N,)."""
+    s_x (M,1), s_w (N,). ``w_unpacked`` is the optional pre-unpacked
+    (K, N) int8 plane for the ref backend (see
+    ``qat.attach_w4a8_ref_planes``); the Pallas path ignores it."""
     M, Kdim = x_q.shape
     N = w_packed.shape[0]
     if not use_pallas:
-        return w4a8_matmul_ref(x_q, w_packed, s_x, s_w, bias, out_dtype)
+        return w4a8_matmul_ref(x_q, w_packed, s_x, s_w, bias, out_dtype,
+                               w_unpacked=w_unpacked)
     xp = _pad_to(x_q, (K.BM, K.BK))
     wp = _pad_to(w_packed, (K.BN, K.BK // 2))
     sxp = _pad_to(s_x.reshape(M, 1).astype(jnp.float32), (K.BM, 1))
@@ -49,5 +52,6 @@ def w4a8_linear(x: jnp.ndarray, exported: dict,
     x2 = x.reshape(-1, x.shape[-1])
     x_q, s_x = dynamic_quantize_to_int(x2, 8, axis=-1)
     y = w4a8_matmul(x_q, exported["wq"], s_x, exported["s_w"].reshape(-1),
-                    exported.get("b"), out_dtype, use_pallas)
+                    exported.get("b"), out_dtype, use_pallas,
+                    w_unpacked=exported.get("wf"))
     return y.reshape(*lead, -1)

@@ -5,6 +5,27 @@ y = (x_q int8 @ w_q int4^T) * s_x * s_w (+ b)
 ``w_packed``: (N, K/2) uint8, two int4 per byte along K (see
 ``repro.core.quantizer.pack_int4``). ``s_x``: (M, 1) per-token fp32.
 ``s_w``: (N,) per-output-channel fp32.
+
+This is also the off-TPU *serve* path (``w4a8_backend="ref"`` / "auto" on
+CPU), so it is written for XLA:CPU speed inside the engine's decode
+``while_loop``, not just clarity:
+
+* The whole weight chain — unpack, transpose to gemm-friendly (K, N),
+  convert to f32 — depends only on loop-invariant params, so XLA hoists it
+  out of the decode loop; per step only the small activation quantize, one
+  gemm, and the two scale multiplies remain. (A split-nibble two-gemm
+  formulation avoids materializing the unpacked matrix but costs an extra
+  gemm + slices *per decode step*, which at serve batch sizes is dispatch-
+  bound and measurably slower.)
+* **Exact f32 accumulation.** Every int8 x int4 partial product and its
+  running sum stays under 2^24 for K < 16512 (any real d_in), so the f32
+  gemm produces the same integers as an int32 dot while lowering to BLAS
+  instead of XLA:CPU's scalar integer dot. Scales multiply the *completed*
+  integer accumulator, in the same order as the Pallas kernel — results
+  stay bit-identical (the bias add is the one spot XLA may contract into
+  an FMA the Pallas graph doesn't, moving isolated elements by one bf16
+  ulp; greedy/sampled token streams are unaffected). The int32 path is
+  kept for the (never hit in practice) huge-K case.
 """
 from __future__ import annotations
 
@@ -16,9 +37,17 @@ from repro.core.quantizer import unpack_int4
 def w4a8_matmul_ref(x_q: jnp.ndarray, w_packed: jnp.ndarray,
                     s_x: jnp.ndarray, s_w: jnp.ndarray,
                     bias: jnp.ndarray | None = None,
-                    out_dtype=jnp.bfloat16) -> jnp.ndarray:
-    w_q = unpack_int4(w_packed)                       # (N, K) int8 in [-8, 7]
-    acc = jnp.dot(x_q.astype(jnp.int32), w_q.T.astype(jnp.int32))  # (M, N)
+                    out_dtype=jnp.bfloat16,
+                    w_unpacked: jnp.ndarray | None = None) -> jnp.ndarray:
+    K = x_q.shape[1]
+    # serve engines pass the cached (K, N) int8 plane (see
+    # qat.attach_w4a8_ref_planes) so decode steps skip the unpack entirely
+    w_i8 = w_unpacked if w_unpacked is not None else unpack_int4(w_packed).T
+    if K * 127 * 8 < 2 ** 24:
+        acc = jnp.einsum("mk,kn->mn", x_q.astype(jnp.float32),
+                         w_i8.astype(jnp.float32))
+    else:
+        acc = jnp.dot(x_q.astype(jnp.int32), w_i8.astype(jnp.int32))
     y = acc.astype(jnp.float32) * s_x.astype(jnp.float32) \
         * s_w.astype(jnp.float32)[None, :]
     if bias is not None:

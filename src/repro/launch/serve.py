@@ -218,6 +218,11 @@ def main():
                          "(/v1/completions with SSE streaming) on this "
                          "port and run until interrupted (0 = off)")
     ap.add_argument("--http-host", default="127.0.0.1")
+    ap.add_argument("--weights", default="bf16", choices=("bf16", "w4a8"),
+                    help="serve weight layout: bf16 fake-quant einsums, or "
+                         "w4a8 packed-int4 weights x dynamic-int8 "
+                         "activations through the deployment matmul "
+                         "(Pallas on TPU, XLA ref elsewhere)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--bench-out", default="",
@@ -246,7 +251,8 @@ def main():
                          cache_len=args.cache_len,
                          decode_block=decode_block,
                          sched_policy=args.sched, slo_shed=args.shed,
-                         max_new_cap=max(32, args.max_new), **kw)
+                         max_new_cap=max(32, args.max_new),
+                         weights_layout=args.weights, **kw)
     if args.http_port:
         run_http(args, engine)
         return
@@ -266,6 +272,11 @@ def main():
           f"({stats['decode_step_s'] * 1e3:.1f} ms/step), "
           f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.0f} ms "
           f"p95 {stats['ttft_p95_s'] * 1e3:.0f} ms")
+    if stats["weights_layout"] == "w4a8":
+        print(f"weights: w4a8 packed, "
+              f"{stats['packed_weight_bytes'] / 1e6:.2f} MB streamed per "
+              f"forward ({stats['weight_hbm_saved_bytes'] / 1e6:.2f} MB "
+              f"bf16 HBM traffic saved)")
     if args.kv_layout == "paged":
         print(f"prefix cache: {stats['prefix_hit_tokens']} hit tokens / "
               f"{stats['prompt_tokens_prefilled']} prefilled, "

@@ -529,18 +529,18 @@ def attn_chunk_prefill(cfg: ModelConfig, ctx: QuantCtx, p: Dict,
     one-shot prefill — same contract as any PagedAttention-style chunked
     prefill over a quantized cache.
     """
-    from repro.kernels.kvq_attn.ops import commit_chunk_kv
-    from repro.kernels.kvq_attn.ref import gather_paged_kv
+    from repro.kernels.kvq_attn.ops import (commit_chunk_kv,
+                                            gather_dequant_paged_kv)
     B, C, _ = x.shape                                 # B = slot-batch n
     q, k, v = _qkv(cfg, ctx, p, x, x, rope, None)
     bs = cache["k_q"].shape[2]
     T = tbl.shape[1]
     Lh = T * bs
-    # dequantized history, head-major (n, Hkv, Lh, D) -> seq-major
-    kh = (gather_paged_kv(cache["k_q"], tbl).astype(jnp.float32)
-          * gather_paged_kv(cache["s_k"], tbl)[..., None])
-    vh = (gather_paged_kv(cache["v_q"], tbl).astype(jnp.float32)
-          * gather_paged_kv(cache["s_v"], tbl)[..., None])
+    # dequantized history, head-major (n, Hkv, Lh, D) -> seq-major; on TPU
+    # a fused Pallas gather-dequant walks each row's table (no int8
+    # intermediate in HBM), elsewhere the two-gather XLA reference
+    kh = gather_dequant_paged_kv(cache["k_q"], cache["s_k"], tbl)
+    vh = gather_dequant_paged_kv(cache["v_q"], cache["s_v"], tbl)
     kh = jnp.swapaxes(kh, 1, 2)
     vh = jnp.swapaxes(vh, 1, 2)
     kall = jnp.concatenate([kh, k.astype(jnp.float32)], axis=1)

@@ -276,6 +276,9 @@ def head_logits(cfg: ModelConfig, params, ctx: QuantCtx, x: jnp.ndarray,
     if cfg.tie_embeddings:
         p = {"w": params["embed"]["w"].T, "s_w": params["head"]["s_w"],
              "s_in": params["head"]["s_in"]}
+        if "w4a8" in params["head"]:
+            # packed export of embed.w.T (attach_w4a8_exports tied-head case)
+            p["w4a8"] = params["head"]["w4a8"]
     else:
         p = params["head"]
     return qlinear(ctx, x, p, subcol(col, "head"),

@@ -82,7 +82,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTENTION_BLOCKS, BLOCK_ATTN, ModelConfig
-from repro.core.qat import make_ctx
+from repro.core.precision import parse_policy
+from repro.core.qat import (attach_w4a8_exports, attach_w4a8_ref_planes,
+                            make_ctx, w4a8_use_pallas, w4a8_weight_bytes)
 from repro.kernels.kvq_attn.ops import copy_pool_blocks
 from repro.models import (decode_step, init_cache, prefill, prefill_tail,
                           spec_verify)
@@ -163,10 +165,36 @@ class ServeEngine:
                  tail_batch: int = 0,
                  prefix_affinity: bool = True,
                  slo_shed: str = "none",
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 weights_layout: str = "bf16",
+                 w4a8_backend: str = "auto"):
         self.cfg = cfg
+        if weights_layout not in ("bf16", "w4a8"):
+            raise ValueError(f"weights_layout must be 'bf16' or 'w4a8', "
+                             f"got {weights_layout!r}")
+        self.weights_layout = weights_layout
+        self._w4a8_bytes = {"packed": 0, "replaced": 0}
+        if weights_layout == "w4a8":
+            pol = parse_policy(policy)
+            # the packed path is real integer arithmetic at int8 activations
+            # x int4 weights; a policy trained differently would serve
+            # numerics it never saw
+            if not (pol.enabled and pol.act_bits == 8 and pol.act_dynamic
+                    and pol.weight_bits <= 4):
+                raise ValueError(
+                    "weights_layout='w4a8' needs a dynamic-A8 W4 policy "
+                    f"(e.g. 'A8d-C8-W4'); got {policy!r}")
+            params = attach_w4a8_exports(params, pol)
+            self._w4a8_bytes = w4a8_weight_bytes(params)
+        self.ctx = make_ctx(policy, weights_layout=weights_layout,
+                            w4a8_backend=w4a8_backend)
+        if weights_layout == "w4a8" and not w4a8_use_pallas(self.ctx):
+            # XLA:CPU can't fuse the nibble unpack into its gemm the way the
+            # Pallas kernel does in-registers; cache the unpacked int8 plane
+            # once so ref decode steps don't re-materialize it (results stay
+            # bit-identical — same integer gemm)
+            params = attach_w4a8_ref_planes(params)
         self.params = params
-        self.ctx = make_ctx(policy)
         self.slots = slots
         self.cache_len = cache_len
         self.max_new_cap = max_new_cap
@@ -234,9 +262,14 @@ class ServeEngine:
                                  "the paged allocator's trim)")
             self.spec = spec if isinstance(spec, SpecConfig) \
                 else SpecConfig(**spec)
+            # the draft slices the (already export-attached) target tree, so
+            # under w4a8 it serves the same packed weights; a draft_policy
+            # override only retunes its activation/cache bits
             self.draft_cfg, self.draft_params = make_draft(cfg, params,
                                                            self.spec)
-            self.draft_ctx = make_ctx(self.spec.draft_policy or policy)
+            self.draft_ctx = make_ctx(self.spec.draft_policy or policy,
+                                      weights_layout=weights_layout,
+                                      w4a8_backend=w4a8_backend)
             # the draft over-commits up to k positions past the accepted
             # extent before rollback; its dense ring must never wrap
             # into live history
@@ -254,10 +287,14 @@ class ServeEngine:
         if auto_block and self.spec is None:
             # spec config is part of the key: toggling spec on/off across
             # engines in one process must not replay a stale probe
+            # weights_layout is part of the key: a bf16-probed block must
+            # not be replayed for the packed-weight step function (different
+            # per-step cost) or vice versa
             probe_key = (cfg.name, policy, slots, kv_layout, cache_len,
                          max_new_cap, block_size if self._paged else 0,
                          self.num_blocks if self._paged else 0,
-                         self.table_len if self._paged else 0, None)
+                         self.table_len if self._paged else 0,
+                         weights_layout)
             if probe_key not in _PROBE_CACHE:
                 _PROBE_CACHE[probe_key] = self._probe_decode_block()
             self.decode_block = _PROBE_CACHE[probe_key]
@@ -1773,6 +1810,11 @@ class ServeEngine:
         cache_bytes                 total cache allocation
         decode_block(_mode)         chunk length and how it was chosen
                                     ("fixed" / "auto" / "spec")
+        weights_layout              serve weight layout ("bf16" / "w4a8")
+        packed_weight_bytes         int4-packed weight + scale + bias bytes
+                                    the w4a8 forward streams (0 under bf16)
+        weight_hbm_saved_bytes      bf16 weight bytes per forward the packed
+                                    layout no longer reads (0 under bf16)
         spec_waves/_drafted/        verify-waves run, draft tokens proposed
         _accepted/_rolled_back      / accepted / rolled back (spec only)
         spec_accept_rate            accepted / drafted (spec only)
@@ -1799,6 +1841,10 @@ class ServeEngine:
         d["max_residents"] = self._max_residents
         d["decode_block"] = self.decode_block
         d["decode_block_mode"] = self._decode_block_mode
+        d["weights_layout"] = self.weights_layout
+        d["packed_weight_bytes"] = self._w4a8_bytes["packed"]
+        d["weight_hbm_saved_bytes"] = max(
+            self._w4a8_bytes["replaced"] - self._w4a8_bytes["packed"], 0)
         if self.spec is not None:
             drafted = d["spec_drafted"]
             d["spec_accept_rate"] = (d["spec_accepted"] / drafted

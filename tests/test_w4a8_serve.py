@@ -1,0 +1,297 @@
+"""Weight-quantized (w4a8) serving path.
+
+Covers the offline export/attach machinery (int4 packing, scale re-grid,
+placeholder-scale fallback, tied-head export, byte accounting), the strict
+qlinear dispatch (no silent bf16 fallback), interpret-mode Pallas-vs-XLA-ref
+bit parity of the packed matmul across odd shapes / exact tiles / cross-tile
+boundaries / bias, and end-to-end token parity of a w4a8-Pallas engine
+against the w4a8 XLA-ref engine — greedy, sampled, speculative decode, and
+preempt/swap-resume.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.precision import parse_policy
+from repro.core.qat import (attach_w4a8_exports, attach_w4a8_ref_planes,
+                            calibrate_weight_scales, export_linear_w4,
+                            init_linear, make_ctx, qlinear,
+                            w4a8_weight_bytes)
+from repro.core.quantizer import pack_int4, unpack_int4
+from repro.kernels.w4a8.ops import w4a8_linear, w4a8_matmul
+from repro.kernels.w4a8.ref import w4a8_matmul_ref
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+POLICY = "A8d-C8-W4"
+
+
+@pytest.fixture(scope="module")
+def served(rng):
+    """Reduced model with *calibrated* weight scales: uncalibrated
+    placeholders round every weight to zero, which would make token-parity
+    checks vacuous (all streams degenerate identically)."""
+    cfg = get_reduced_config("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    params = calibrate_weight_scales(params, parse_policy(POLICY))
+    return cfg, params
+
+
+def _rand_case(rng_np, m, k, n, bias):
+    x_q = jnp.asarray(rng_np.integers(-127, 128, (m, k)), jnp.int8)
+    w_q = jnp.asarray(rng_np.integers(-8, 8, (n, k)), jnp.int8)
+    s_x = jnp.asarray(rng_np.random((m, 1)) * 0.1 + 1e-3, jnp.float32)
+    s_w = jnp.asarray(rng_np.random((n,)) * 0.1 + 1e-3, jnp.float32)
+    b = jnp.asarray(rng_np.standard_normal(n), jnp.float32) if bias else None
+    return x_q, pack_int4(w_q), s_x, s_w, b
+
+
+class TestW4A8MatmulParity:
+    """Pallas (interpret off-TPU) vs XLA ref: bit-identical, not just close."""
+
+    # odd everything / sub-tile / exact BM,BK,BN=(256,512,256) tile /
+    # one-past-boundary — the pad-and-slice wrapper must be invisible
+    @pytest.mark.parametrize("mkn", [(1, 2, 1), (3, 130, 5), (8, 256, 512),
+                                     (256, 512, 256), (257, 514, 259)])
+    @pytest.mark.parametrize("bias", [False, True])
+    def test_pallas_matches_ref_bitwise(self, mkn, bias):
+        rng_np = np.random.default_rng(sum(mkn) + bias)
+        x_q, wp, s_x, s_w, b = _rand_case(rng_np, *mkn, bias)
+        ref = w4a8_matmul(x_q, wp, s_x, s_w, b, use_pallas=False)
+        pal = w4a8_matmul(x_q, wp, s_x, s_w, b, use_pallas=True)
+        assert ref.dtype == pal.dtype == jnp.bfloat16
+        if b is None:
+            # integer accumulate + scale multiplies round identically
+            assert bool(jnp.all(ref == pal))
+        else:
+            # XLA may contract the ref's ``y * s_w + b`` into an FMA the
+            # (differently fused) Pallas graph doesn't use, moving isolated
+            # elements by one bf16 ulp.  Bound it: everything within 1 ulp,
+            # and at most a vanishing fraction differs at all.
+            r32 = ref.astype(jnp.float32)
+            p32 = pal.astype(jnp.float32)
+            # one bf16 ulp of v is 2**(floor(log2 |v|) - 7) <= |v| * 2**-7
+            ulp = 2.0 ** -7 * jnp.maximum(
+                jnp.maximum(jnp.abs(r32), jnp.abs(p32)), 2.0 ** -126)
+            assert bool(jnp.all(jnp.abs(r32 - p32) <= ulp))
+            mismatched = int(jnp.sum(ref != pal))
+            assert mismatched <= max(1, ref.size // 10_000)
+
+    def test_ref_matches_int32_oracle(self):
+        """The f32-accumulation fast path reproduces exact integer math."""
+        rng_np = np.random.default_rng(0)
+        x_q, wp, s_x, s_w, b = _rand_case(rng_np, 9, 258, 33, True)
+        oracle = (jnp.dot(x_q.astype(jnp.int32),
+                          unpack_int4(wp).T.astype(jnp.int32))
+                  .astype(jnp.float32) * s_x * s_w[None, :] + b[None, :]
+                  ).astype(jnp.bfloat16)
+        got = w4a8_matmul_ref(x_q, wp, s_x, s_w, b)
+        assert bool(jnp.all(oracle == got))
+
+    def test_cached_plane_identical_to_unpack(self):
+        """The engine's ref-backend decode cache (``wf``) changes nothing."""
+        rng_np = np.random.default_rng(1)
+        x_q, wp, s_x, s_w, b = _rand_case(rng_np, 4, 64, 48, True)
+        plane = jnp.swapaxes(unpack_int4(wp), -1, -2)
+        a = w4a8_matmul_ref(x_q, wp, s_x, s_w, b)
+        c = w4a8_matmul_ref(x_q, wp, s_x, s_w, b, w_unpacked=plane)
+        assert bool(jnp.all(a == c))
+
+
+class TestExportAttach:
+    def test_export_shapes_and_dtypes(self, rng):
+        p = init_linear(rng, 64, 48, bias=True)
+        exp = export_linear_w4(p)
+        assert exp["wq"].shape == (48, 32) and exp["wq"].dtype == jnp.uint8
+        assert exp["s_w"].shape == p["s_w"].shape
+        assert exp["s_w"].dtype == jnp.float32
+        assert "b" in exp
+
+    def test_odd_d_in_rejected(self, rng):
+        with pytest.raises(ValueError, match="even d_in"):
+            export_linear_w4(init_linear(rng, 63, 8))
+
+    def test_placeholder_scale_fallback(self, rng):
+        """Exactly-1.0 (uncalibrated) channels re-derive absmax/7 so the
+        export never quantizes real weights to all-zeros."""
+        p = init_linear(rng, 32, 8)
+        p["s_w"] = jnp.ones_like(p["s_w"])
+        exp = export_linear_w4(p)
+        got = unpack_int4(exp["wq"])
+        assert int(jnp.sum(jnp.abs(got))) > 0
+        # dequant error bounded by half a quantization step per element
+        deq = jnp.swapaxes(got, -1, -2).astype(jnp.float32) * exp["s_w"]
+        err = jnp.abs(deq - p["w"].astype(jnp.float32))
+        assert float(jnp.max(err / exp["s_w"])) <= 0.5 + 1e-3
+
+    def test_head_regrid_from_8bit_lattice(self, rng):
+        p = init_linear(rng, 32, 8)
+        p["s_w"] = p["s_w"] * 0.01          # calibrated (non-placeholder)
+        exp8 = export_linear_w4(p, trained_bits=8)
+        # 8-bit-trained scales stretch onto the int4 grid by qmax ratio
+        assert jnp.allclose(exp8["s_w"], p["s_w"] * (127.0 / 7.0))
+
+    def test_attach_covers_every_served_linear(self, served):
+        cfg, params = served
+        tree = attach_w4a8_exports(params, parse_policy(POLICY))
+        missing = []
+
+        def walk(t, path):
+            if isinstance(t, dict):
+                if "w" in t and "s_w" in t and "w4a8" not in t:
+                    missing.append(path)
+                for k, v in t.items():
+                    if isinstance(v, (dict, list, tuple)):
+                        walk(v, f"{path}/{k}")
+            elif isinstance(t, (list, tuple)):
+                for i, v in enumerate(t):
+                    walk(v, f"{path}[{i}]")
+
+        walk(tree, "")
+        assert not missing
+        # tied head: no bf16 "w" of its own, exports from the embedding
+        assert "w4a8" in tree["head"] and "w" not in tree["head"]
+        assert tree["head"]["w4a8"]["wq"].shape[0] == cfg.vocab_size
+
+    def test_weight_bytes_accounting(self, served):
+        _, params = served
+        tree = attach_w4a8_exports(params, parse_policy(POLICY))
+        by = w4a8_weight_bytes(tree)
+        assert 0 < by["packed"] < by["replaced"]
+        # the ref-backend decode cache is not part of the packed layout
+        assert w4a8_weight_bytes(attach_w4a8_ref_planes(tree)) == by
+
+    def test_qlinear_raises_without_export(self, rng):
+        ctx = make_ctx(parse_policy(POLICY), mode="serve",
+                       weights_layout="w4a8")
+        p = init_linear(rng, 16, 8)
+        x = jnp.ones((2, 16), jnp.bfloat16)
+        with pytest.raises(ValueError, match="no packed"):
+            qlinear(ctx, x, p)
+
+    def test_deployed_linear_tracks_fake_quant(self, rng):
+        """w4a8_linear approximates the calibrated fake-quant forward."""
+        p = init_linear(rng, 64, 32)
+        pol = parse_policy(POLICY)
+        p = calibrate_weight_scales({"lin": p}, pol)["lin"]
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64), jnp.bfloat16)
+        ctx = make_ctx(pol, mode="serve")
+        fake = qlinear(ctx, x, p)
+        real = w4a8_linear(x, export_linear_w4(p), use_pallas=False)
+        assert jnp.mean(jnp.abs(fake.astype(jnp.float32)
+                                - real.astype(jnp.float32))) < 0.05
+
+
+class TestW4A8ServeParity:
+    """w4a8-Pallas(interpret) and w4a8-XLA-ref engines emit identical
+    token streams end-to-end."""
+
+    def _engine(self, served, backend, **kw):
+        cfg, params = served
+        kw.setdefault("slots", 2)
+        kw.setdefault("cache_len", 64)
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("block_size", 16)
+        kw.setdefault("prefill_chunk", 8)
+        return ServeEngine(cfg, params, policy=POLICY,
+                           weights_layout="w4a8", w4a8_backend=backend, **kw)
+
+    def _serve(self, eng, n=4, max_new=8, **req_kw):
+        reqs = [Request(uid=i,
+                        prompt=np.arange(20 + i, dtype=np.int32) % 60,
+                        max_new_tokens=max_new, **req_kw)
+                for i in range(n)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        return [list(r.generated) for r in reqs]
+
+    def test_greedy_parity(self, served):
+        ref = self._serve(self._engine(served, "ref"))
+        pal = self._serve(self._engine(served, "pallas"))
+        assert any(ref) and ref == pal
+
+    def test_sampled_parity(self, served):
+        kw = dict(temperature=0.8, top_k=5, seed=7)
+        ref = self._serve(self._engine(served, "ref"), **kw)
+        pal = self._serve(self._engine(served, "pallas"), **kw)
+        assert any(ref) and ref == pal
+
+    def test_spec_decode_parity(self, served):
+        ref = self._serve(self._engine(served, "ref", spec={"k": 2}))
+        pal = self._serve(self._engine(served, "pallas", spec={"k": 2}))
+        assert any(ref) and ref == pal
+        # exact verify/rollback: spec output equals the plain w4a8 stream
+        assert ref == self._serve(self._engine(served, "ref"))
+
+    def test_preempt_swap_resume_parity(self, served):
+        """Over-committed optimistic pool: preempted-and-restored w4a8
+        decode resumes bit-exactly, on both backends."""
+        def run(backend):
+            eng = self._engine(served, backend, slots=4, cache_len=64,
+                               block_size=8, num_blocks=8, max_seq_len=96,
+                               admission="optimistic", prefix_cache=False,
+                               decode_block=4, prefill_chunk=None)
+            reqs = [Request(uid=i,
+                            prompt=(np.arange(10, dtype=np.int32) * 7 + i)
+                            % 250,
+                            max_new_tokens=12) for i in range(3)]
+            for r in reqs:
+                eng.submit(r)
+            stats = eng.run_until_drained(max_steps=50_000)
+            assert all(r.done for r in reqs)
+            assert stats["preemptions"] >= 1
+            assert stats["swap_out_bytes"] == stats["swap_in_bytes"] > 0
+            return [list(r.generated) for r in reqs]
+
+        ref = run("ref")
+        # uninterrupted single-slot run: preemption must not change tokens
+        solo = self._engine(served, "ref", slots=1, cache_len=64,
+                            block_size=8, num_blocks=32, max_seq_len=96,
+                            decode_block=4, prefill_chunk=None)
+        solo_req = Request(uid=0,
+                          prompt=(np.arange(10, dtype=np.int32) * 7) % 250,
+                          max_new_tokens=12)
+        solo.submit(solo_req)
+        solo.run_until_drained()
+        assert ref[0] == list(solo_req.generated)
+        assert run("pallas") == ref
+
+    def test_stats_surface(self, served):
+        cfg, params = served
+        w4 = self._engine(served, "ref")
+        st = w4.stats()
+        assert st["weights_layout"] == "w4a8"
+        assert st["packed_weight_bytes"] > 0
+        assert st["weight_hbm_saved_bytes"] > 0
+        bf = ServeEngine(cfg, params, policy=POLICY)
+        st = bf.stats()
+        assert st["weights_layout"] == "bf16"
+        assert st["packed_weight_bytes"] == 0
+        assert st["weight_hbm_saved_bytes"] == 0
+
+    def test_rejects_incompatible_policy(self, served):
+        cfg, params = served
+        # parseable policy, but W8 weights have no int4 export to serve
+        with pytest.raises(ValueError, match="dynamic-A8 W4"):
+            ServeEngine(cfg, params, policy="A8d-C8-W8", weights_layout="w4a8")
+        # static-activation policies can't feed the dynamic-A8 kernel either
+        with pytest.raises(ValueError, match="dynamic-A8 W4"):
+            ServeEngine(cfg, params, policy="A8s-C8-W4", weights_layout="w4a8")
+        with pytest.raises(ValueError, match="weights_layout"):
+            ServeEngine(cfg, params, policy=POLICY, weights_layout="int4")
+
+
+class TestServePathLint:
+    def test_no_weight_einsum_outside_funnel(self):
+        import importlib.util
+        from pathlib import Path
+        root = Path(__file__).resolve().parents[1]
+        spec = importlib.util.spec_from_file_location(
+            "check_w4a8_lint", root / "tools" / "check_w4a8_lint.py")
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        assert mod.check_static(root) == []
