@@ -28,6 +28,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    if model_parallel < 1 or n % model_parallel != 0:
+        raise ValueError(
+            f"model_parallel={model_parallel} must divide the device "
+            f"count ({n} available) — force more host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N or pick "
+            "a TP degree that divides the machine")
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))

@@ -218,6 +218,10 @@ def main():
                          "(/v1/completions with SSE streaming) on this "
                          "port and run until interrupted (0 = off)")
     ap.add_argument("--http-host", default="127.0.0.1")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: builds a local "
+                         "('data', 'model') mesh over the visible devices "
+                         "and serves every wave sharded across it")
     ap.add_argument("--weights", default="bf16", choices=("bf16", "w4a8"),
                     help="serve weight layout: bf16 fake-quant einsums, or "
                          "w4a8 packed-int4 weights x dynamic-int8 "
@@ -247,12 +251,22 @@ def main():
             kw["spec"] = SpecConfig(k=args.spec_k,
                                     draft_layers=args.spec_draft or None,
                                     accept_mode=args.spec_accept)
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(model_parallel=args.tp)
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
                          cache_len=args.cache_len,
                          decode_block=decode_block,
                          sched_policy=args.sched, slo_shed=args.shed,
                          max_new_cap=max(32, args.max_new),
-                         weights_layout=args.weights, **kw)
+                         weights_layout=args.weights, mesh=mesh, **kw)
+    if mesh is not None:
+        st0 = engine.stats()
+        print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} devices, "
+              f"tp={engine.tp}; per device: "
+              f"{st0['per_device_pool_bytes'] / 1e6:.2f} MB KV pool, "
+              f"{st0['per_device_weight_bytes'] / 1e6:.2f} MB weights")
     if args.http_port:
         run_http(args, engine)
         return

@@ -252,6 +252,15 @@ def _qkv(cfg: ModelConfig, ctx: QuantCtx, p: Dict, xq: jnp.ndarray,
     if ctx.attn_shard_mode:
         from repro.models.common import shard_hint
         dp = ctx.batch_axes or None
+        if ctx.attn_shard_mode == "tp":
+            # serve-side tensor parallelism: q AND kv heads shard over
+            # "model" (the engine only selects this mode when both head
+            # counts divide), so attention is head-local per device and
+            # the block-pool commit stays collective-free
+            q = shard_hint(q, dp, None, "model", None)
+            k = shard_hint(k, dp, None, "model", None)
+            v = shard_hint(v, dp, None, "model", None)
+            return q, k, v
         if ctx.attn_shard_mode == "kv_rep":
             q = shard_hint(q, dp, None, "model", None)
         elif ctx.attn_shard_mode == "seq":

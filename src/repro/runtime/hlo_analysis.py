@@ -386,3 +386,68 @@ def analyze_collectives(hlo: str) -> Dict:
             "by_op": {k: float(v) for k, v in by_op.items()},
             "per_site": sorted(per_site, key=lambda s: -s["bytes"])[:40],
             "unresolved_loops": unresolved}
+
+
+# --------------------------------------------------------------------------
+# Per-wave collective accounting (sharded serving CI gates)
+# --------------------------------------------------------------------------
+
+_COLL_SITE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[\w\[\],\{\}]+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def collective_sites(hlo: str) -> List[Dict]:
+    """Every collective site in the module, untruncated and loop-agnostic.
+
+    Static site inventory for the sharded-serve CI gate: unlike
+    ``analyze_collectives`` this does not weight by trip count or cap the
+    site list, so a single stray gather deep in a layer scan still shows
+    up. Each entry carries the per-dtype byte breakdown of the result
+    type (tuple results contribute one group per element).
+    """
+    sites = []
+    for line in hlo.splitlines():
+        mm = _COLL_SITE_RE.search(line)
+        if not mm:
+            continue
+        type_str, op = mm.group(1), mm.group(2)
+        groups = []
+        for dtype, dims in _SHAPE_RE.findall(type_str):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            groups.append({"dtype": dtype, "bytes": n * _DTYPE_BYTES[dtype]})
+        sites.append({"op": op, "bytes": sum(g["bytes"] for g in groups),
+                      "groups": groups, "line": line.strip()[:160]})
+    return sites
+
+
+def collective_counts(hlo: str) -> Dict[str, int]:
+    """Static site count per collective op (all-gather-start/-done pairs
+    count once)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for s in collective_sites(hlo):
+        counts[s["op"]] += 1
+    return dict(counts)
+
+
+def pool_allgather_sites(hlo: str, min_bytes: int = 1 << 16) -> List[Dict]:
+    """all-gather sites that move a large int8 buffer — the signature of a
+    sharded KV block pool (or packed-weight plane) being accidentally
+    regathered. Legit TP collectives are f32/bf16 (row-parallel
+    all-reduce, sampled-logit gather) or tiny (amax scalars), so any
+    s8/u8 all-gather over ``min_bytes`` fails the sharded-serve gate.
+    """
+    bad = []
+    for s in collective_sites(hlo):
+        if s["op"] != "all-gather":
+            continue
+        if any(g["dtype"] in ("s8", "u8") and g["bytes"] >= min_bytes
+               for g in s["groups"]):
+            bad.append(s)
+    return bad

@@ -16,7 +16,20 @@ divide falls back to replication, never to a compile error):
   (mixtral-8e on a 16-way axis); router replicated
 * per-channel quantizer scales follow their weight's output sharding;
   per-tensor scales, norms and the recurrence diagonal replicate
+* w4a8 export planes (``<linear>/w4a8/{wq,s_w,b,wf}``) shard like the
+  linear they shadow: column-parallel owners split ``wq`` on d_out and
+  ``s_w``/``b``/``wf`` on the output channel; row-parallel owners split
+  ``wq`` on the packed d_in/2 axis (nibble pairs pack adjacent input
+  channels, so a divisible packed axis cuts between pairs) and ``wf`` on
+  d_in, with ``s_w``/``b`` replicated
 * anything under ``segments/`` gets a leading None for the scan axis
+
+Serving rules (``serve_cache_spec`` / ``serve_state_shardings``): only the
+quantized KV payload shards — over "model" on the KV-head dim, so GQA
+groups stay device-local and the grouped decode grid survives unchanged
+per shard. Block tables, positions, lengths, sampling state and token
+buffers replicate: the host ``BlockAllocator`` keeps dealing in global
+block ids with zero API change.
 
 Batch rules: global batch over ("pod","data"); sequence over "data" when the
 batch dim cannot shard (long_500k, batch=1 -> sequence parallelism for the
@@ -77,6 +90,33 @@ def param_spec(cfg: ModelConfig, mesh: Mesh, path: str,
         if in_scan and len(spec) < len(shape):
             return P(*((None,) * (len(shape) - len(spec)) + tuple(spec)))
         return spec
+
+    # ---- w4a8 export planes (serve-time packed weights) -------------------
+    # Must precede the head branch: head/w4a8/wq has parts[-2] == "w4a8".
+    if "w4a8" in parts:
+        owner = parts[parts.index("w4a8") - 1] if parts.index("w4a8") else ""
+        col = owner in COL_PARALLEL or owner == "head"
+        row = owner in ROW_PARALLEL
+        if key == "wq":                 # packed uint8 (d_out, d_in/2)
+            if col:
+                return lead(P(_maybe("model", shape[-2], mesh), None))
+            if row:
+                return lead(P(None, _maybe("model", shape[-1], mesh)))
+            return lead(P(None, None))
+        if key == "wf":                 # int8 ref plane (d_in, d_out)
+            if col:
+                return lead(P(None, _maybe("model", shape[-1], mesh)))
+            if row:
+                return lead(P(_maybe("model", shape[-2], mesh), None))
+            return lead(P(None, None))
+        if key == "s_w":                # (1, d_out): follows output sharding
+            if col:
+                return lead(P(None, _maybe("model", shape[-1], mesh)))
+            return lead(P(None, None))
+        if key == "b":
+            return lead(P(_maybe("model", shape[-1], mesh)) if col
+                        else P(None))
+        return lead(P())
 
     # ---- embeddings / head ------------------------------------------------
     if path.endswith("embed/w"):        # (V, d) or (maxpos, d)
@@ -229,6 +269,56 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shapes) -> Any:
         spec = cache_spec(cfg, mesh, _path_str(path), leaf.shape)
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Serving-engine shardings (paged pool + full device state pytree)
+# --------------------------------------------------------------------------
+
+def serve_cache_spec(cfg: ModelConfig, mesh: Mesh, path: str,
+                     shape: Tuple[int, ...]) -> P:
+    """Serve-cache leaf sharding (paged block pool or dense per-slot).
+
+    Unlike the training ``cache_spec``, the leading pool axis is NEVER
+    sharded: for a paged pool that axis is the global block-id space the
+    host allocator indexes into, and splitting it over "data" would turn
+    every block-table lookup into a cross-device gather. Only the KV-head
+    dim shards (over "model", when divisible) so attention stays
+    head-local per device; everything else — lengths, positions, block
+    tables, recurrent state — replicates.
+    """
+    key = path.split("/")[-1]
+    m = mesh.shape["model"]
+    dims: list = [None] * len(shape)
+    if key in ("k_q", "v_q") and len(shape) >= 4:   # (..., NB|B, Hkv, S, D)
+        if _divides(shape[-3], m):
+            dims[-3] = "model"
+    elif key in ("s_k", "s_v") and len(shape) >= 3:  # (..., NB|B, Hkv, S)
+        if _divides(shape[-2], m):
+            dims[-2] = "model"
+    return P(*dims)
+
+
+def serve_cache_shardings(cfg: ModelConfig, mesh: Mesh, cache) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        spec = serve_cache_spec(cfg, mesh, _path_str(path), leaf.shape)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def serve_state_shardings(cfg: ModelConfig, mesh: Mesh, state) -> Any:
+    """Shardings for the engine's full device state pytree.
+
+    The cache subtree follows ``serve_cache_spec``; sampling state, token
+    buffers, RNG keys and per-slot bookkeeping replicate (they are tiny
+    and the sampler all-gathers the sharded logits anyway).
+    """
+    rep = NamedSharding(mesh, P())
+    return {k: (serve_cache_shardings(cfg, mesh, v) if k == "cache"
+                else jax.tree.map(lambda _: rep, v))
+            for k, v in state.items()}
 
 
 def opt_shardings(param_sh: Any, opt_state_shapes) -> Any:

@@ -80,6 +80,8 @@ from typing import Callable, Dict, List, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ATTENTION_BLOCKS, BLOCK_ATTN, ModelConfig
 from repro.core.precision import parse_policy
@@ -88,6 +90,8 @@ from repro.core.qat import (attach_w4a8_exports, attach_w4a8_ref_planes,
 from repro.kernels.kvq_attn.ops import copy_pool_blocks
 from repro.models import (decode_step, init_cache, prefill, prefill_tail,
                           spec_verify)
+from repro.runtime.sharding import (param_shardings, serve_cache_shardings,
+                                    serve_state_shardings)
 from repro.serve.block_alloc import BlockAllocator, PoolDry
 from repro.serve.sampling import (TOP_K_CAP, fold_step, sample_tokens,
                                   token_probs)
@@ -122,6 +126,20 @@ def _clamp_lengths(segments, lens):
 # decode_block="auto" probe results, memoized per process so benchmark
 # scripts constructing several engines don't re-pay the probe compiles
 _PROBE_CACHE: Dict[tuple, int] = {}
+
+
+def _device_local_bytes(tree) -> int:
+    """One device's share of a pytree: sharded leaves count their shard
+    bytes, replicated / single-device leaves their full size."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and hasattr(sh, "shard_shape"):
+            total += (int(np.prod(sh.shard_shape(leaf.shape)))
+                      * leaf.dtype.itemsize)
+        else:
+            total += getattr(leaf, "nbytes", 0)
+    return total
 
 
 @dataclass(eq=False)                    # identity equality: the ndarray
@@ -167,8 +185,17 @@ class ServeEngine:
                  slo_shed: str = "none",
                  spec: Optional[SpecConfig] = None,
                  weights_layout: str = "bf16",
-                 w4a8_backend: str = "auto"):
+                 w4a8_backend: str = "auto",
+                 mesh: Optional[Mesh] = None):
         self.cfg = cfg
+        self.mesh = mesh
+        self.tp = 1
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    "serving mesh needs a 'model' axis for tensor "
+                    f"parallelism; got axes {tuple(mesh.axis_names)}")
+            self.tp = int(mesh.shape["model"])
         if weights_layout not in ("bf16", "w4a8"):
             raise ValueError(f"weights_layout must be 'bf16' or 'w4a8', "
                              f"got {weights_layout!r}")
@@ -186,14 +213,27 @@ class ServeEngine:
                     f"(e.g. 'A8d-C8-W4'); got {policy!r}")
             params = attach_w4a8_exports(params, pol)
             self._w4a8_bytes = w4a8_weight_bytes(params)
+        # activation hints only when every head count divides the TP axis;
+        # otherwise the params already fell back to replication and a hint
+        # would fight GSPMD's propagation
+        attn_mode = "tp" if (self.tp > 1
+                             and cfg.n_heads % self.tp == 0
+                             and cfg.n_kv_heads % self.tp == 0) else ""
         self.ctx = make_ctx(policy, weights_layout=weights_layout,
-                            w4a8_backend=w4a8_backend)
+                            w4a8_backend=w4a8_backend,
+                            attn_shard_mode=attn_mode)
         if weights_layout == "w4a8" and not w4a8_use_pallas(self.ctx):
             # XLA:CPU can't fuse the nibble unpack into its gemm the way the
             # Pallas kernel does in-registers; cache the unpacked int8 plane
             # once so ref decode steps don't re-materialize it (results stay
             # bit-identical — same integer gemm)
             params = attach_w4a8_ref_planes(params)
+        if mesh is not None:
+            # commit the full weight tree (packed planes included) to the
+            # mesh: column/row-parallel linears split over "model", so the
+            # draft built below slices already-sharded leaves
+            params = jax.device_put(
+                params, param_shardings(cfg, mesh, params))
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
@@ -269,7 +309,8 @@ class ServeEngine:
                                                            self.spec)
             self.draft_ctx = make_ctx(self.spec.draft_policy or policy,
                                       weights_layout=weights_layout,
-                                      w4a8_backend=w4a8_backend)
+                                      w4a8_backend=w4a8_backend,
+                                      attn_shard_mode=attn_mode)
             # the draft over-commits up to k positions past the accepted
             # extent before rollback; its dense ring must never wrap
             # into live history
@@ -290,11 +331,16 @@ class ServeEngine:
             # weights_layout is part of the key: a bf16-probed block must
             # not be replayed for the packed-weight step function (different
             # per-step cost) or vice versa
+            # mesh shape is part of the key: a tp=2 probe's per-step cost
+            # (collectives, per-device gemm sizes) must not be replayed
+            # for tp=1 or a different mesh, and vice versa
             probe_key = (cfg.name, policy, slots, kv_layout, cache_len,
                          max_new_cap, block_size if self._paged else 0,
                          self.num_blocks if self._paged else 0,
                          self.table_len if self._paged else 0,
-                         weights_layout)
+                         weights_layout,
+                         tuple(sorted(self.mesh.shape.items()))
+                         if self.mesh is not None else None)
             if probe_key not in _PROBE_CACHE:
                 _PROBE_CACHE[probe_key] = self._probe_decode_block()
             self.decode_block = _PROBE_CACHE[probe_key]
@@ -302,26 +348,28 @@ class ServeEngine:
         # most. The state pytree is donated so the slot caches are updated
         # in place (no 2x cache copy per chunk; a no-op on backends
         # without donation support, e.g. CPU).
-        self._decode_jit = jax.jit(self._decode_chunk, static_argnums=(2,),
-                                   donate_argnums=(1,))
-        self._admit_jit = jax.jit(self._admit_batch, static_argnums=(10,),
-                                  donate_argnums=(1,))
+        self._decode_jit = self._under_mesh(
+            jax.jit(self._decode_chunk, static_argnums=(2,),
+                    donate_argnums=(1,)))
+        self._admit_jit = self._under_mesh(
+            jax.jit(self._admit_batch, static_argnums=(10,),
+                    donate_argnums=(1,)))
         if self._paged:
-            self._admit_paged_jit = jax.jit(
+            self._admit_paged_jit = self._under_mesh(jax.jit(
                 self._admit_batch_paged, static_argnums=(11,),
-                donate_argnums=(1,))
+                donate_argnums=(1,)))
             # one compiled program advances a whole wave of tail/chunked
             # prefills: per-row (slot, c0, tail_len), pad rows dropped
-            self._tail_jit = jax.jit(
+            self._tail_jit = self._under_mesh(jax.jit(
                 lambda params, cache, toks, slots_, c0s, clens, hb:
                 prefill_tail(self.cfg, params, self.ctx, toks,
                              cache, slots_, c0s, clens, hist_blocks=hb),
-                static_argnums=(6,), donate_argnums=(1,))
+                static_argnums=(6,), donate_argnums=(1,)))
             # swap-in restore: one donated scatter for the whole payload
             # (per-leaf .at[].set calls would each materialize a second
             # pool — transient 2x cache HBM on every restore)
-            self._swap_in_jit = jax.jit(self._swap_in_scatter,
-                                        donate_argnums=(0,))
+            self._swap_in_jit = self._under_mesh(
+                jax.jit(self._swap_in_scatter, donate_argnums=(0,)))
 
             def cow_copy(cache, src, dst):
                 def cp(path, leaf):
@@ -332,20 +380,55 @@ class ServeEngine:
 
             # donated so the COW clone rewrites pool blocks in place
             # instead of materializing a second pool
-            self._cow_jit = jax.jit(cow_copy, donate_argnums=(0,))
+            self._cow_jit = self._under_mesh(
+                jax.jit(cow_copy, donate_argnums=(0,)))
         if self.spec is not None:
             # draft loop: k+1 draft decode steps in one compiled scan
             # (the last step only commits the final proposal's KV)
-            self._draft_jit = jax.jit(self._spec_draft, static_argnums=(8,),
-                                      donate_argnums=(1,))
+            self._draft_jit = self._under_mesh(
+                jax.jit(self._spec_draft, static_argnums=(8,),
+                        donate_argnums=(1,)))
             # verify-wave: commit + all-position logits + acceptance +
             # rollback of the device counters, one compiled program
-            self._spec_jit = jax.jit(self._spec_wave, static_argnums=(5, 6),
-                                     donate_argnums=(1,))
+            self._spec_jit = self._under_mesh(
+                jax.jit(self._spec_wave, static_argnums=(5, 6),
+                        donate_argnums=(1,)))
             # draft-side admission: prefill the draft cache for freshly
             # armed decode residents
-            self._draft_admit_jit = jax.jit(self._draft_admit,
-                                            donate_argnums=(1,))
+            self._draft_admit_jit = self._under_mesh(
+                jax.jit(self._draft_admit, donate_argnums=(1,)))
+
+    def _under_mesh(self, fn):
+        """Wrap a compiled program so it traces and runs inside the mesh
+        context — the bare-axis ``shard_hint`` constraints in the model
+        code resolve against it, and GSPMD partitions the wave across the
+        mesh instead of batching per-device copies. Identity without a
+        mesh."""
+        if self.mesh is None:
+            return fn
+        mesh = self.mesh
+
+        def run(*args, **kwargs):
+            with mesh:
+                return fn(*args, **kwargs)
+        return run
+
+    def _served_weight_leaves(self) -> List:
+        """The weight leaves the serve forward actually streams: under
+        w4a8 the packed export planes, under bf16 the whole tree."""
+        if self.weights_layout != "w4a8":
+            return jax.tree.leaves(self.params)
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.params)
+        return [leaf for path, leaf in flat
+                if any(getattr(p, "key", None) == "w4a8" for p in path)]
+
+    def _shard_state(self, state: Dict) -> Dict:
+        """Commit the device state pytree to the mesh: KV pool sharded
+        over "model" on the KV-head dim, everything else replicated."""
+        if self.mesh is None:
+            return state
+        return jax.device_put(
+            state, serve_state_shardings(self.cfg, self.mesh, state))
 
     # ------------------------------------------------------------------
     # Compiled programs
@@ -636,7 +719,7 @@ class ServeEngine:
         be resubmitted to the old engine's allocator state — their
         prefix-lookup memos are invalidated by an epoch bump.
         """
-        self.state = self._blank_state()
+        self.state = self._shard_state(self._blank_state())
         # monotone epoch invalidates per-request lookup memos across
         # resets (an id()-based token could collide on address reuse)
         self._alloc_epoch = getattr(self, "_alloc_epoch", -1) + 1
@@ -666,6 +749,11 @@ class ServeEngine:
             self._draft_cache = init_cache(self.draft_cfg, self.draft_ctx,
                                            self.slots,
                                            self._draft_cache_len)
+            if self.mesh is not None:
+                self._draft_cache = jax.device_put(
+                    self._draft_cache,
+                    serve_cache_shardings(self.draft_cfg, self.mesh,
+                                          self._draft_cache))
             self._host.update({"spec_waves": 0, "spec_drafted": 0,
                                "spec_accepted": 0, "spec_rolled_back": 0,
                                "spec_draft_prefill_tokens": 0})
@@ -1262,7 +1350,12 @@ class ServeEngine:
         release is what retires freed slots' rows to the sentinel so their
         masked commits drop)."""
         if self._tbl_dirty:
-            self.state["cache"]["block_tbl"] = jnp.asarray(self.alloc.tables)
+            tbl = jnp.asarray(self.alloc.tables)
+            if self.mesh is not None:
+                # commit replicated: uncommitted single-device arrays
+                # would make XLA pick a fresh sharding per program
+                tbl = jax.device_put(tbl, NamedSharding(self.mesh, P()))
+            self.state["cache"]["block_tbl"] = tbl
             self._tbl_dirty = False
 
     def _ensure_decode_blocks(self) -> None:
@@ -1733,7 +1826,7 @@ class ServeEngine:
         st = self._blank_state()
         st["active"] = jnp.ones((self.slots,), bool)
         st["max_new"] = jnp.full((self.slots,), self.max_new_cap, jnp.int32)
-        return st
+        return self._shard_state(st)
 
     def _probe_decode_block(self, candidates=(4, 8, 16, 32)) -> int:
         """Measured decode-step latency probe (``decode_block="auto"``).
@@ -1751,8 +1844,9 @@ class ServeEngine:
             # donate each probe state: the probe must not stack extra full
             # cache pytrees on top of the engine's own state (the paged
             # pool can be sized near device HBM)
-            fn = jax.jit(self._decode_chunk, static_argnums=(2,),
-                         donate_argnums=(1,))
+            fn = self._under_mesh(
+                jax.jit(self._decode_chunk, static_argnums=(2,),
+                        donate_argnums=(1,)))
             jax.block_until_ready(
                 fn(self.params, self._probe_state(), True)["tokens"])
             best = float("inf")
@@ -1810,6 +1904,12 @@ class ServeEngine:
         cache_bytes                 total cache allocation
         decode_block(_mode)         chunk length and how it was chosen
                                     ("fixed" / "auto" / "spec")
+        mesh_shape / tp_degree      serving mesh axis sizes (None off-mesh)
+                                    and the "model"-axis TP degree
+        per_device_pool_bytes       one device's share of the KV cache
+                                    (sharded leaves count shard bytes)
+        per_device_weight_bytes     one device's share of the served
+                                    weights (w4a8: the packed planes)
         weights_layout              serve weight layout ("bf16" / "w4a8")
         packed_weight_bytes         int4-packed weight + scale + bias bytes
                                     the w4a8 forward streams (0 under bf16)
@@ -1841,6 +1941,13 @@ class ServeEngine:
         d["max_residents"] = self._max_residents
         d["decode_block"] = self.decode_block
         d["decode_block_mode"] = self._decode_block_mode
+        d["mesh_shape"] = (dict(self.mesh.shape)
+                           if self.mesh is not None else None)
+        d["tp_degree"] = self.tp
+        d["per_device_pool_bytes"] = _device_local_bytes(
+            self.state["cache"]["segments"])
+        d["per_device_weight_bytes"] = _device_local_bytes(
+            self._served_weight_leaves())
         d["weights_layout"] = self.weights_layout
         d["packed_weight_bytes"] = self._w4a8_bytes["packed"]
         d["weight_hbm_saved_bytes"] = max(

@@ -13,7 +13,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models.common import shard_hint
+
 _NEG = -1e30
+
+
+def _replicated(logits: jnp.ndarray) -> jnp.ndarray:
+    """Gather vocab-sharded logits before sampling (no-op off-mesh).
+
+    Under tensor-parallel serving the head is column-parallel, so logits
+    arrive sharded over the vocab. The PRNG is *not* partitionable
+    (legacy threefry: a categorical draw over a sharded operand generates
+    different bits per shard layout), so sampling on sharded logits
+    breaks tp=1-vs-tp=N stream parity. This all-gather of the sampled
+    logits is one of the two canonical TP collectives per wave; the rest
+    of the sampler then runs replicated and bit-identical to tp=1.
+    """
+    return shard_hint(logits, *([None] * logits.ndim))
 
 
 def make_slot_keys(seeds: jnp.ndarray) -> jnp.ndarray:
@@ -42,7 +58,7 @@ def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray,
     search / categorical draw in the decode loop when no resident request
     samples.
     """
-    logits = logits.astype(jnp.float32)
+    logits = _replicated(logits.astype(jnp.float32))
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     if greedy_only:
         return greedy
@@ -74,7 +90,7 @@ def token_probs(logits: jnp.ndarray, temperature: jnp.ndarray,
     against these probabilities reduces to exact argmax matching for
     greedy requests. Returns (B, V) fp32 rows summing to 1.
     """
-    logits = logits.astype(jnp.float32)
+    logits = _replicated(logits.astype(jnp.float32))
     masked = _topk_masked(logits, top_k)
     temp = jnp.maximum(temperature, 1e-6)[:, None]
     p = jax.nn.softmax(masked / temp, axis=-1)
