@@ -1,0 +1,21 @@
+"""Static serve-graph analysis: compiled-HLO invariant rules + auditor.
+
+The parsing substrate lives in ``repro.runtime.hlo_analysis``; this
+package layers the pluggable rule set (:mod:`repro.analysis.rules`), the
+per-engine auditor (:mod:`repro.analysis.auditor`), and the w4a8 funnel
+lint (:mod:`repro.analysis.w4a8_lint`) on top. ``tools/audit_serve.py``
+is the CLI entry; ``docs/architecture.md`` documents the invariants.
+"""
+from .auditor import (AuditReport, audit_engine, audit_waves,
+                      engine_audit_ctx)
+from .rules import (CollectiveCensusRule, DequantPlacementRule,
+                    DonationRule, HostTransferRule, RetraceBudgetRule,
+                    Rule, Violation, W4A8FunnelRule,
+                    default_retrace_budgets, default_rules)
+
+__all__ = [
+    "AuditReport", "audit_engine", "audit_waves", "engine_audit_ctx",
+    "Rule", "Violation", "DonationRule", "HostTransferRule",
+    "DequantPlacementRule", "RetraceBudgetRule", "CollectiveCensusRule",
+    "W4A8FunnelRule", "default_rules", "default_retrace_budgets",
+]

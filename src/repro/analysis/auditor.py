@@ -1,0 +1,155 @@
+"""Serve-graph auditor: run a rule set over every compiled wave.
+
+``audit_engine`` enumerates a :class:`ServeEngine`'s live compiled
+executables through ``engine.compiled_waves()`` (duck-typed — anything
+with that surface audits), compiles each representative program from
+abstract args, and checks every rule; ``audit_waves`` is the pure core
+that also accepts synthetic wave dicts so seeded-violation tests can
+feed crafted HLO. The result renders as a rule x wave matrix plus
+violation details, and serializes to JSON for the CI artifact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .rules import (Rule, Violation, default_retrace_budgets, default_rules)
+
+_ENGINE_COL = "(engine)"
+
+
+@dataclass
+class AuditReport:
+    waves: List[str]                      # wave labels, audit order
+    rules: List[str]                      # rule names, audit order
+    cells: Dict = field(default_factory=dict)   # (rule, wave) -> "ok"/"FAIL"
+    violations: List[Violation] = field(default_factory=list)
+    meta: Dict = field(default_factory=dict)
+    unknown_dtypes: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def render(self) -> str:
+        cols = self.rules
+        rows = self.waves
+        wave_w = max([len(w) for w in rows] + [4])
+        col_ws = [max(len(c), 4) for c in cols]
+        lines = []
+        title = self.meta.get("title", "serve-graph audit")
+        lines.append(f"== {title} ==")
+        for k, v in sorted(self.meta.items()):
+            if k != "title":
+                lines.append(f"   {k}: {v}")
+        if self.unknown_dtypes:
+            lines.append(f"   unknown dtypes (skipped by byte model): "
+                         f"{self.unknown_dtypes}")
+        lines.append("")
+        hdr = " " * (wave_w + 2) + "  ".join(
+            c.ljust(w) for c, w in zip(cols, col_ws))
+        lines.append(hdr)
+        for wave in rows:
+            cells = []
+            for c, w in zip(cols, col_ws):
+                cells.append(self.cells.get((c, wave), "-").ljust(w))
+            lines.append(wave.ljust(wave_w + 2) + "  ".join(cells))
+        if self.violations:
+            lines.append("")
+            lines.append(f"{len(self.violations)} violation(s):")
+            for v in self.violations:
+                lines.append(str(v))
+        else:
+            lines.append("")
+            lines.append("clean: every wave passes every rule")
+        return "\n".join(lines)
+
+    def to_json(self) -> Dict:
+        return {
+            "ok": self.ok,
+            "waves": self.waves,
+            "rules": self.rules,
+            "matrix": {rule: {wave: self.cells.get((rule, wave), "-")
+                              for wave in self.waves}
+                       for rule in self.rules},
+            "violations": [{"rule": v.rule, "wave": v.wave,
+                            "summary": v.summary, "sites": v.sites}
+                           for v in self.violations],
+            "unknown_dtypes": self.unknown_dtypes,
+            "meta": self.meta,
+        }
+
+
+def audit_waves(waves: List[Dict], rules: Optional[List[Rule]] = None,
+                ctx: Optional[Dict] = None) -> AuditReport:
+    """Pure rule evaluation over compiled wave dicts.
+
+    ``waves``: [{family, label, hlo, donated: [...]}, ...] — what
+    ``audit_engine`` builds, or synthetic equivalents in tests.
+    ``ctx``: engine-level facts rules read (pool_elems, tp,
+    variant_counts, variant_signatures, budgets, weights_layout).
+    """
+    rules = default_rules() if rules is None else rules
+    ctx = ctx or {}
+    wave_rules = [r for r in rules if r.scope == "wave"]
+    engine_rules = [r for r in rules if r.scope == "engine"]
+    labels = [w["label"] for w in waves]
+    report = AuditReport(
+        waves=labels + ([_ENGINE_COL] if engine_rules else []),
+        rules=[r.name for r in rules])
+    unknown: set = set()
+    for wave in waves:
+        # surface skipped dtype tokens from the shared parser substrate
+        from repro.runtime.hlo_analysis import analyze_collectives
+        unknown.update(analyze_collectives(wave["hlo"])["unknown_dtypes"])
+        for rule in wave_rules:
+            vs = rule.check(wave, ctx)
+            report.cells[(rule.name, wave["label"])] = \
+                "FAIL" if vs else "ok"
+            report.violations.extend(vs)
+    for rule in engine_rules:
+        vs = rule.check_engine(ctx)
+        report.cells[(rule.name, _ENGINE_COL)] = "FAIL" if vs else "ok"
+        report.violations.extend(vs)
+    report.unknown_dtypes = sorted(unknown)
+    return report
+
+
+def engine_audit_ctx(engine, budgets: Optional[Dict[str, int]] = None
+                     ) -> Dict:
+    """Engine-level facts for the rule set (duck-typed engine surface)."""
+    return {
+        "pool_elems": engine.pool_shard_elems(),
+        "tp": getattr(engine, "tp", 1),
+        "variant_counts": engine.compile_variant_counts(),
+        "variant_signatures": engine.wave_variant_signatures(),
+        "budgets": (budgets if budgets is not None
+                    else default_retrace_budgets(engine)),
+        "weights_layout": getattr(engine, "weights_layout", "bf16"),
+    }
+
+
+def audit_engine(engine, rules: Optional[List[Rule]] = None,
+                 budgets: Optional[Dict[str, int]] = None,
+                 buckets: int = 1) -> AuditReport:
+    """Compile every live wave family abstractly and audit it.
+
+    Compiling from ``ShapeDtypeStruct``s materializes nothing and leaves
+    the engine's serving jits (and their variant counts) untouched.
+    ``budgets`` overrides the engine-derived retrace budgets; ``buckets``
+    widens the admission-length enumeration (see ``compiled_waves``).
+    """
+    ctx = engine_audit_ctx(engine, budgets)
+    waves = []
+    for w in engine.compiled_waves(buckets=buckets):
+        hlo = w["lower"]().compile().as_text()
+        waves.append({**w, "hlo": hlo})
+    report = audit_waves(waves, rules, ctx)
+    report.meta.update({
+        "tp": ctx["tp"],
+        "weights_layout": ctx["weights_layout"],
+        "pool_elems": ctx["pool_elems"],
+        "compile_variants": ctx["variant_counts"],
+        "budgets": ctx["budgets"],
+    })
+    return report

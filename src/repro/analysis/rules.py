@@ -1,0 +1,307 @@
+"""Pluggable static rules over a serve wave's compiled HLO.
+
+Each rule checks one compiled-graph invariant the engine's performance
+claims rest on (see ``docs/architecture.md`` — "compiled-graph
+invariants"). A rule is an object with
+
+  name        — row label in the audit matrix
+  scope       — "wave" (checked against every compiled wave) or "engine"
+                (checked once against engine-level context)
+  check(wave, ctx)         (wave scope)
+  check_engine(ctx)        (engine scope)
+
+both returning a list of :class:`Violation`. ``wave`` is a plain dict
+from ``ServeEngine.compiled_waves()`` with the compiled HLO text added
+under ``"hlo"``; ``ctx`` carries engine-level facts (see
+``auditor.audit_engine``). Rules must never mutate either.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.runtime.hlo_analysis import (collective_counts, entry_parameters,
+                                        float_intermediate_sites,
+                                        host_transfer_sites,
+                                        input_output_aliases,
+                                        pool_allgather_sites)
+
+# numpy dtype name -> HLO dtype token, for matching donated pytree leaves
+# against entry-parameter shapes in the compiled module
+_HLO_DTYPE = {
+    "bool": "pred", "int8": "s8", "uint8": "u8", "int16": "s16",
+    "uint16": "u16", "int32": "s32", "uint32": "u32", "int64": "s64",
+    "uint64": "u64", "float16": "f16", "bfloat16": "bf16",
+    "float32": "f32", "float64": "f64",
+}
+
+
+@dataclass
+class Violation:
+    rule: str
+    wave: str                       # wave label, or "(engine)"
+    summary: str
+    sites: List[str] = field(default_factory=list)   # op names / details
+
+    def __str__(self):
+        out = f"[{self.rule}] {self.wave}: {self.summary}"
+        for s in self.sites[:8]:
+            out += f"\n    - {s}"
+        if len(self.sites) > 8:
+            out += f"\n    ... and {len(self.sites) - 8} more"
+        return out
+
+
+class Rule:
+    name = "rule"
+    scope = "wave"
+
+    def check(self, wave: Dict, ctx: Dict) -> List[Violation]:
+        return []
+
+    def check_engine(self, ctx: Dict) -> List[Violation]:
+        return []
+
+
+class DonationRule(Rule):
+    """Every large donated input must appear in the executable's
+    input-output alias table.
+
+    A donated buffer XLA silently declined to alias is copied instead of
+    reused — a transient 2x of that buffer (for the int8 pool, the exact
+    regression paging exists to avoid). Donated leaves below ``min_bytes``
+    are ignored (scalar counters are donated for convenience, not HBM).
+    Leaked leaves are named by matching the donated inventory against the
+    aliased entry parameters on (dtype, per-device bytes) — robust to XLA
+    pruning unused params and renumbering the rest.
+    """
+    name = "donation"
+
+    def __init__(self, min_bytes: int = 1 << 16):
+        self.min_bytes = min_bytes
+
+    def check(self, wave, ctx):
+        big = [d for d in wave.get("donated", ())
+               if d["bytes"] >= self.min_bytes]
+        if not big:
+            return []
+        hlo = wave["hlo"]
+        aliased_nums = {a["param"] for a in input_output_aliases(hlo)}
+        aliased_sizes = Counter(
+            (p["dtype"], p["bytes"]) for p in entry_parameters(hlo)
+            if p["num"] in aliased_nums and p["bytes"] >= self.min_bytes)
+        leaked = []
+        for leaf in big:
+            key = (_HLO_DTYPE.get(leaf["dtype"], leaf["dtype"]),
+                   leaf["bytes"])
+            if aliased_sizes[key] > 0:
+                aliased_sizes[key] -= 1
+            else:
+                leaked.append(leaf)
+        if not leaked:
+            return []
+        total = sum(d["bytes"] for d in leaked)
+        return [Violation(
+            self.name, wave["label"],
+            f"{len(leaked)}/{len(big)} large donated leaves not in the "
+            f"alias table — {total} bytes copied per call instead of "
+            "reused in place",
+            [f"{d['path']} ({d['dtype']}, {d['bytes']} B)"
+             for d in sorted(leaked, key=lambda d: -d['bytes'])])]
+
+
+class HostTransferRule(Rule):
+    """No d2h/h2d copies, infeed/outfeed, or host custom-calls inside any
+    wave body — one hidden host sync serializes the whole step loop."""
+    name = "host-transfer"
+
+    def check(self, wave, ctx):
+        sites = host_transfer_sites(wave["hlo"])
+        if not sites:
+            return []
+        return [Violation(
+            self.name, wave["label"],
+            f"{len(sites)} host-transfer site(s) inside the compiled wave",
+            [f"{s['computation']}: {s['reason']} — {s['line'][:100]}"
+             for s in sites])]
+
+
+class DequantPlacementRule(Rule):
+    """No f32/bf16 intermediate within ``frac`` of the int8 pool plane.
+
+    The A8-C8-W4 memory win requires pool reads to dequantize windowed
+    inside kernels; a float intermediate rivaling a full cache plane
+    means a plane was dequantized wholesale (the fused-kernel funnel got
+    bypassed). Reference size: ``ctx["pool_elems"]``, the per-device
+    element count of the largest int8 cache plane.
+    """
+    name = "dequant-placement"
+
+    def __init__(self, frac: float = 0.5):
+        self.frac = frac
+
+    def check(self, wave, ctx):
+        pool = int(ctx.get("pool_elems", 0))
+        if pool <= 0:
+            return []
+        min_elems = max(int(self.frac * pool), 1)
+        sites = float_intermediate_sites(wave["hlo"], min_elems)
+        if not sites:
+            return []
+        return [Violation(
+            self.name, wave["label"],
+            f"{len(sites)} float intermediate(s) >= {min_elems} elems "
+            f"(pool plane {pool} elems x frac {self.frac}) — a cache "
+            "plane is being dequantized outside the kernel window",
+            [f"%{s['name']} = {s['dtype']}[{s['elems']}] {s['op']} in "
+             f"{s['computation']}"
+             + (f" ({s['op_name'][-60:]})" if s['op_name'] else "")
+             for s in sites[:12]])]
+
+
+class RetraceBudgetRule(Rule):
+    """Each wave family stays within its declared compile-variant budget.
+
+    Budgets are the combinatoric bounds of the engine's bucketing
+    discipline (power-of-two batch pads, length buckets, boolean
+    statics); exceeding one means a shape leaked past a bucket and every
+    such call pays a multi-second recompile mid-serve. The offending
+    shape signatures (recorded live by the engine's wave registry) are
+    named.
+    """
+    name = "retrace-budget"
+    scope = "engine"
+
+    def __init__(self, budgets: Optional[Dict[str, int]] = None):
+        self.budgets = budgets
+
+    def check_engine(self, ctx):
+        budgets = self.budgets if self.budgets is not None \
+            else ctx.get("budgets", {})
+        counts = ctx.get("variant_counts", {})
+        sigs = ctx.get("variant_signatures", {})
+        out = []
+        for family, count in sorted(counts.items()):
+            budget = budgets.get(family)
+            if budget is None or count <= budget:
+                continue
+            over = sigs.get(family, [])[budget:]
+            out.append(Violation(
+                self.name, "(engine)",
+                f"wave family '{family}' compiled {count} variants, "
+                f"budget {budget}",
+                [f"variant {budget + i + 1}: {s}"
+                 for i, s in enumerate(over)] or
+                [f"{count - budget} variant(s) over budget "
+                 "(signatures unavailable)"]))
+        return out
+
+
+class CollectiveCensusRule(Rule):
+    """Only the canonical TP collectives, never an s8 pool gather.
+
+    tp=1 waves must contain no collectives at all. tp>1 waves may use the
+    row-parallel all-reduce / logit all-gather, but an s8/u8 all-gather
+    over ``min_bytes`` is the signature of the sharded pool (or a packed
+    weight plane) being accidentally regathered; and a tp>1 decode wave
+    with *no* all-reduce means the TP sharding silently fell apart into
+    replicated compute.
+    """
+    name = "collectives"
+
+    def __init__(self, min_pool_bytes: int = 1 << 16):
+        self.min_pool_bytes = min_pool_bytes
+
+    def check(self, wave, ctx):
+        tp = int(ctx.get("tp", 1) or 1)
+        hlo = wave["hlo"]
+        counts = collective_counts(hlo)
+        out = []
+        if tp <= 1:
+            if counts:
+                out.append(Violation(
+                    self.name, wave["label"],
+                    f"collectives in a single-device wave: {counts}"))
+            return out
+        bad = pool_allgather_sites(hlo, self.min_pool_bytes)
+        if bad:
+            out.append(Violation(
+                self.name, wave["label"],
+                f"{len(bad)} large s8/u8 all-gather(s) — the sharded int8 "
+                "pool is being regathered",
+                [s["line"][:120] for s in bad]))
+        if wave["family"] == "decode" and not counts.get("all-reduce"):
+            out.append(Violation(
+                self.name, wave["label"],
+                f"tp={tp} decode wave has no all-reduce — row-parallel "
+                "TP compute is not actually partitioned"))
+        return out
+
+
+class W4A8FunnelRule(Rule):
+    """Static half of the w4a8 lint as an audit rule: every weight einsum
+    in the serve-path modules sits inside the ``qlinear`` funnel, so the
+    packed-weight dispatch covers it. Runs only when the audited engine
+    serves ``weights_layout="w4a8"`` (the funnel is what makes that
+    layout sound)."""
+    name = "w4a8-funnel"
+    scope = "engine"
+
+    def __init__(self, root: Optional[Path] = None):
+        # repo root: src/repro/analysis/rules.py -> three parents up
+        self.root = root or Path(__file__).resolve().parents[3]
+
+    def check_engine(self, ctx):
+        if ctx.get("weights_layout") != "w4a8":
+            return []
+        from .w4a8_lint import check_static
+        bad = check_static(Path(self.root))
+        if not bad:
+            return []
+        return [Violation(
+            self.name, "(engine)",
+            f"{len(bad)} weight einsum(s) outside the qlinear funnel",
+            [f"{path}:{line} (in {fn})" for path, line, fn in bad])]
+
+
+def _pow2_variants(n: int) -> int:
+    """How many distinct power-of-two pads a dimension in [1, n] can take."""
+    seen = set()
+    p = 1
+    while p < max(n, 1):
+        seen.add(p)
+        p *= 2
+    seen.add(p)
+    return len(seen)
+
+
+def default_retrace_budgets(engine) -> Dict[str, int]:
+    """Combinatoric variant bounds implied by the engine's bucketing
+    discipline. Every count the discipline permits is budgeted; one more
+    means a shape leaked past a bucket."""
+    slots = engine.slots
+    len_buckets = max(-(-engine.max_seq_len // engine.prefill_bucket), 1) \
+        if getattr(engine, "max_seq_len", None) else 8
+    budgets = {
+        "decode": 2,                      # greedy_only in {False, True}
+        "admit_dense": 2 * _pow2_variants(slots) * len_buckets,
+        "admit_paged": 2 * _pow2_variants(slots) * len_buckets,
+    }
+    if getattr(engine, "_paged", False):
+        tbl = engine.table_len
+        budgets["tail"] = _pow2_variants(tbl)          # hb buckets
+        budgets["swap_in"] = _pow2_variants(tbl)       # m_pad buckets
+        budgets["cow"] = _pow2_variants(engine.num_blocks)
+    if getattr(engine, "spec", None) is not None:
+        tbl = engine.table_len
+        budgets["spec_draft"] = 2
+        budgets["spec_verify"] = 2 * _pow2_variants(tbl)
+        budgets["admit_draft"] = _pow2_variants(slots) * len_buckets
+    return budgets
+
+
+def default_rules() -> List[Rule]:
+    return [DonationRule(), HostTransferRule(), DequantPlacementRule(),
+            RetraceBudgetRule(), CollectiveCensusRule(), W4A8FunnelRule()]

@@ -19,13 +19,16 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "token": 0, "opaque": 0,
 }
+
+# float dtypes a dequantized int8 buffer could materialize as
+FLOAT_DTYPES = ("f16", "bf16", "f32", "f64")
 
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
@@ -52,11 +55,20 @@ def _callees(line: str):
     return out
 
 
-def _shape_bytes(text: str) -> int:
-    """Sum bytes over every dtype[dims] group in a result type string."""
+def _shape_bytes(text: str, unknown: Optional[set] = None) -> int:
+    """Sum bytes over every dtype[dims] group in a result type string.
+
+    Dtype tokens missing from ``_DTYPE_BYTES`` (e.g. ``s4``, ``f8e4m3``)
+    contribute 0 bytes and are recorded into ``unknown`` when a set is
+    passed — flag-and-skip, never a KeyError, so a new XLA dtype degrades
+    an analysis into an explicit ``unknown_dtypes`` report field instead
+    of crashing it (or silently undercounting traffic).
+    """
     total = 0
     for dtype, dims in _SHAPE_RE.findall(text):
         if dtype not in _DTYPE_BYTES:
+            if unknown is not None:
+                unknown.add(dtype)
             continue
         n = 1
         if dims:
@@ -89,6 +101,24 @@ def _split_computations(hlo: str) -> Dict[str, List[str]]:
     return comps
 
 
+def _find_entry(hlo: str, comps: Dict[str, List[str]]) -> Optional[str]:
+    """Name of the ENTRY computation (fallback: the largest one).
+
+    Matches on the bare ``ENTRY %name (`` prefix: the old signature-shaped
+    regex choked on tuple-typed parameters (nested parens) and silently
+    fell back, mis-rooting the call-graph walk."""
+    entry = None
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY"):
+            m = _HDR_RE.match(ls)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    return entry
+
+
 # ops that alias / relabel buffers: no HBM traffic of their own
 _NO_TRAFFIC = {
     "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
@@ -114,14 +144,7 @@ def _first_dims(type_str: str):
 def _entry_and_mult(hlo: str, comps):
     """(entry, trip, mult, exec_comps): loop multipliers + the set of
     computations that execute as program code (not fusion/reducer bodies)."""
-    entry = None
-    for line in hlo.splitlines():
-        if line.strip().startswith("ENTRY"):
-            m = _COMP_RE.match(line.strip().removeprefix("ENTRY").strip())
-            if m:
-                entry = m.group(1)
-    if entry is None:
-        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    entry = _find_entry(hlo, comps)
 
     trip: Dict[str, int] = {}
     unresolved = 0
@@ -192,9 +215,12 @@ def analyze_program(hlo: str) -> Dict:
                      (dynamic-(update-)slice counted at slice size: in-place)
       collectives  — {"total_bytes", "by_op", "per_site"}
       unresolved_loops
+      unknown_dtypes — dtype tokens skipped by the byte model (flagged,
+                       never a crash; their buffers contribute 0 bytes)
     """
     comps = _split_computations(hlo)
     entry, trip, mult, exec_comps, unresolved = _entry_and_mult(hlo, comps)
+    unknown: set = set()
 
     flops = 0.0
     hbm = 0.0
@@ -215,7 +241,7 @@ def analyze_program(hlo: str) -> Dict:
         for name, type_str, op, line in parsed:
             if op in _NO_TRAFFIC:
                 continue
-            out_b = _shape_bytes(type_str)
+            out_b = _shape_bytes(type_str, unknown)
             # ---- collectives ----
             base = next((c for c in COLLECTIVE_OPS
                          if op in (c, c + "-start", c + "-done")), None)
@@ -252,7 +278,7 @@ def analyze_program(hlo: str) -> Dict:
                 ops_names = _OPERAND_RE.findall(arg.split(")", 1)[0])
                 upd = shapes.get(ops_names[1], "") if len(ops_names) > 1 \
                     else ""
-                hbm += 2.0 * _shape_bytes(upd) * m      # read+write the slice
+                hbm += 2.0 * _shape_bytes(upd, unknown) * m  # read+write slice
                 continue
             if op == "dynamic-slice":
                 hbm += 2.0 * out_b * m
@@ -271,7 +297,7 @@ def analyze_program(hlo: str) -> Dict:
             operand_bytes = []
             for on in _OPERAND_RE.findall(arg_span[:end]):
                 if on in shapes:
-                    b = _shape_bytes(shapes[on])
+                    b = _shape_bytes(shapes[on], unknown)
                     in_b += b
                     operand_bytes.append((b, shapes[on]))
             op_traffic = out_b + in_b
@@ -306,20 +332,15 @@ def analyze_program(hlo: str) -> Dict:
                             "by_op": {k: float(v) for k, v in by_op.items()},
                             "per_site": sorted(per_site,
                                                key=lambda s: -s["bytes"])[:40]},
-            "unresolved_loops": unresolved}
+            "unresolved_loops": unresolved,
+            "unknown_dtypes": sorted(unknown)}
 
 
 def analyze_collectives(hlo: str) -> Dict:
-    """Returns {"total_bytes", "by_op", "per_site", "unresolved_loops"}."""
+    """Returns {"total_bytes", "by_op", "per_site", "unresolved_loops",
+    "unknown_dtypes"}."""
     comps = _split_computations(hlo)
-    entry = None
-    for line in hlo.splitlines():
-        if line.strip().startswith("ENTRY"):
-            m = _COMP_RE.match(line.strip().removeprefix("ENTRY").strip())
-            if m:
-                entry = m.group(1)
-    if entry is None:   # fall back: computation containing while or most ops
-        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    entry = _find_entry(hlo, comps)
 
     # while body -> trip count (from its condition computation)
     trip: Dict[str, int] = {}
@@ -366,6 +387,7 @@ def analyze_collectives(hlo: str) -> Dict:
 
     by_op: Dict[str, float] = defaultdict(float)
     per_site = []
+    unknown: set = set()
     coll_line = re.compile(
         r"%?[\w\.\-]+\s*=\s*(.+?)\s+"
         r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
@@ -377,7 +399,7 @@ def analyze_collectives(hlo: str) -> Dict:
             if not mm:
                 continue
             shape_txt, op = mm.group(1), mm.group(2)
-            b = _shape_bytes(shape_txt) * m
+            b = _shape_bytes(shape_txt, unknown) * m
             by_op[op] += b
             per_site.append({"op": op, "computation": cname,
                              "bytes": b, "mult": m,
@@ -385,7 +407,8 @@ def analyze_collectives(hlo: str) -> Dict:
     return {"total_bytes": float(sum(by_op.values())),
             "by_op": {k: float(v) for k, v in by_op.items()},
             "per_site": sorted(per_site, key=lambda s: -s["bytes"])[:40],
-            "unresolved_loops": unresolved}
+            "unresolved_loops": unresolved,
+            "unknown_dtypes": sorted(unknown)}
 
 
 # --------------------------------------------------------------------------
@@ -414,16 +437,22 @@ def collective_sites(hlo: str) -> List[Dict]:
             continue
         type_str, op = mm.group(1), mm.group(2)
         groups = []
+        unknown: List[str] = []
         for dtype, dims in _SHAPE_RE.findall(type_str):
             if dtype not in _DTYPE_BYTES:
+                if dtype not in unknown:
+                    unknown.append(dtype)
                 continue
             n = 1
             if dims:
                 for d in dims.split(","):
                     n *= int(d)
             groups.append({"dtype": dtype, "bytes": n * _DTYPE_BYTES[dtype]})
-        sites.append({"op": op, "bytes": sum(g["bytes"] for g in groups),
-                      "groups": groups, "line": line.strip()[:160]})
+        site = {"op": op, "bytes": sum(g["bytes"] for g in groups),
+                "groups": groups, "line": line.strip()[:160]}
+        if unknown:
+            site["unknown_dtypes"] = unknown
+        sites.append(site)
     return sites
 
 
@@ -451,3 +480,168 @@ def pool_allgather_sites(hlo: str, min_bytes: int = 1 << 16) -> List[Dict]:
                for g in s["groups"]):
             bad.append(s)
     return bad
+
+
+# --------------------------------------------------------------------------
+# Serve-graph audit walkers (entry params, alias table, host transfers,
+# float intermediates) — the parsing substrate for ``repro.analysis``.
+# --------------------------------------------------------------------------
+
+_PARAM_RE = re.compile(r"\bparameter\((\d+)\)")
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\}(?:,\s*([\w-]+))?\)")
+
+
+def _int_tuple(text: str) -> Tuple[int, ...]:
+    return tuple(int(x) for x in text.split(",") if x.strip())
+
+
+def entry_parameters(hlo: str) -> List[Dict]:
+    """Entry-computation parameters: [{num, name, dtype, bytes, shape,
+    op_name}].
+
+    ``op_name`` carries the jax-side pytree path when XLA preserved the
+    metadata (e.g. ``state['k_q']``) — the auditor uses it to name leaked
+    donations in terms the engine author recognizes.
+    """
+    comps = _split_computations(hlo)
+    entry = _find_entry(hlo, comps)
+    params = []
+    for line in comps.get(entry, []) if entry else []:
+        om = _OP_RE.match(line)
+        if not om or om.group(3) != "parameter":
+            continue
+        pm = _PARAM_RE.search(line)
+        if not pm:
+            continue
+        type_str = om.group(2)
+        sm = _SHAPE_RE.search(type_str)
+        nm = _OP_NAME_RE.search(line)
+        params.append({
+            "num": int(pm.group(1)),
+            "name": om.group(1),
+            "dtype": sm.group(1) if sm else "",
+            "shape": _first_dims(type_str),
+            "bytes": _shape_bytes(type_str),
+            "op_name": nm.group(1) if nm else "",
+        })
+    params.sort(key=lambda p: p["num"])
+    return params
+
+
+def input_output_aliases(hlo: str) -> List[Dict]:
+    """Parse the module-header ``input_output_alias={...}`` table.
+
+    Each entry maps an output (tuple) index to a parameter and an index
+    path within it: [{output_index, param, param_index, kind}]. Donated
+    jit arguments that XLA honored appear here; a donated buffer missing
+    from this table was silently copied instead of reused.
+    """
+    key = "input_output_alias={"
+    start = hlo.find(key)
+    if start < 0:
+        return []
+    i = start + len(key)
+    depth = 1
+    while i < len(hlo) and depth > 0:
+        if hlo[i] == "{":
+            depth += 1
+        elif hlo[i] == "}":
+            depth -= 1
+        i += 1
+    region = hlo[start + len(key):i - 1]
+    out = []
+    for om, pnum, pidx, kind in _ALIAS_ENTRY_RE.findall(region):
+        out.append({"output_index": _int_tuple(om),
+                    "param": int(pnum),
+                    "param_index": _int_tuple(pidx),
+                    "kind": kind or "may-alias"})
+    return out
+
+
+# op names that move data between host and device (or synchronize on the
+# host) when they appear inside a compiled wave body
+_HOST_OPS = {"infeed", "outfeed", "send", "send-done", "recv", "recv-done"}
+# custom-call targets that are host round-trips in disguise
+_HOST_CALL_PAT = ("callback", "MoveToHost", "MoveToDevice", "SendToHost",
+                  "RecvFromHost", "HostExecute")
+_CC_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
+
+
+def host_transfer_sites(hlo: str) -> List[Dict]:
+    """Ops that imply a host transfer / host sync inside the program.
+
+    Flags (a) infeed/outfeed/send/recv ops, (b) custom-calls whose target
+    matches a known host-callback / host-offload pattern, and (c) buffers
+    explicitly annotated into host memory space ``S(5)``. One hidden d2h
+    inside a decode wave serializes the whole step loop, so the serve
+    audit requires this list to be empty for every wave.
+    """
+    comps = _split_computations(hlo)
+    sites = []
+    for cname, lines in comps.items():
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            op = om.group(3)
+            reason = None
+            if op in _HOST_OPS:
+                reason = f"host op `{op}`"
+            elif op == "custom-call":
+                tm = _CC_TARGET_RE.search(line)
+                target = tm.group(1) if tm else ""
+                if any(p.lower() in target.lower() for p in _HOST_CALL_PAT):
+                    reason = f'host custom-call "{target}"'
+            if reason is None and "S(5)" in line:
+                reason = "buffer in host memory space S(5)"
+            if reason is not None:
+                sites.append({"op": op, "computation": cname,
+                              "reason": reason,
+                              "line": line.strip()[:160]})
+    return sites
+
+
+def float_intermediate_sites(hlo: str, min_elems: int) -> List[Dict]:
+    """Float-typed intermediates of at least ``min_elems`` elements in any
+    *executed* computation (entry + while bodies/conditions; fusion bodies
+    are interior and excluded — their results are what the fusion op line
+    already shows).
+
+    The dequant-placement audit feeds this the int8 pool size: a bf16/f32
+    intermediate within a size factor of the pool means a cache plane was
+    dequantized wholesale instead of windowed inside the kernel.
+    """
+    comps = _split_computations(hlo)
+    entry, trip, mult, exec_comps, unresolved = _entry_and_mult(hlo, comps)
+    skip = _NO_TRAFFIC | {"copy", "convert-done"}
+    sites = []
+    for cname in exec_comps:
+        for line in comps[cname]:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            name, type_str, op = om.group(1), om.group(2), om.group(3)
+            if op in skip:
+                continue
+            best = None
+            for dtype, dims in _SHAPE_RE.findall(type_str):
+                if dtype not in FLOAT_DTYPES:
+                    continue
+                n = 1
+                if dims:
+                    for d in dims.split(","):
+                        n *= int(d)
+                if n >= min_elems and (best is None or n > best[1]):
+                    best = (dtype, n)
+            if best is None:
+                continue
+            nm = _OP_NAME_RE.search(line)
+            sites.append({"op": op, "name": name, "computation": cname,
+                          "dtype": best[0], "elems": best[1],
+                          "bytes": best[1] * _DTYPE_BYTES[best[0]],
+                          "op_name": nm.group(1) if nm else "",
+                          "line": line.strip()[:160]})
+    sites.sort(key=lambda s: -s["elems"])
+    return sites

@@ -142,6 +142,26 @@ def _device_local_bytes(tree) -> int:
     return total
 
 
+def _arg_signature(args) -> str:
+    """Compact shape signature of one wave call — built only when the
+    call triggered a fresh compile, so it may walk the pytrees freely.
+    Scalars (the static argnums ride along positionally) print verbatim,
+    single arrays as dtype[shape], larger pytrees as a leaf-count digest:
+    the varying axes that cause retraces live in the top-level arrays."""
+    parts = []
+    for a in args:
+        if a is None or isinstance(a, (bool, int, float, str)):
+            parts.append(repr(a))
+            continue
+        leaves = jax.tree.leaves(a)
+        if len(leaves) == 1 and hasattr(leaves[0], "shape"):
+            leaf = leaves[0]
+            parts.append(f"{leaf.dtype}{list(leaf.shape)}")
+        else:
+            parts.append(f"tree#{len(leaves)}")
+    return "(" + ", ".join(parts) + ")"
+
+
 @dataclass(eq=False)                    # identity equality: the ndarray
 class Request:                          # prompt field breaks value __eq__
     uid: int
@@ -348,55 +368,95 @@ class ServeEngine:
         # most. The state pytree is donated so the slot caches are updated
         # in place (no 2x cache copy per chunk; a no-op on backends
         # without donation support, e.g. CPU).
-        self._decode_jit = self._under_mesh(
-            jax.jit(self._decode_chunk, static_argnums=(2,),
-                    donate_argnums=(1,)))
-        self._admit_jit = self._under_mesh(
-            jax.jit(self._admit_batch, static_argnums=(10,),
-                    donate_argnums=(1,)))
+        #
+        # Every wave goes through _wave(family, ...): the registry runs it
+        # under the mesh and records a shape signature whenever the call
+        # triggered a fresh compile, so stats()["compile_variants"] and
+        # the retrace-budget audit read live per-family variant counts.
+        self._wave_jits: Dict[str, object] = {}
+        self._wave_variants: Dict[str, List[str]] = {}
+        self._decode_jit = self._wave("decode", jax.jit(
+            self._decode_chunk, static_argnums=(2,), donate_argnums=(1,)))
+        self._admit_jit = self._wave("admit_dense", jax.jit(
+            self._admit_batch, static_argnums=(10,), donate_argnums=(1,)))
         if self._paged:
-            self._admit_paged_jit = self._under_mesh(jax.jit(
+            self._admit_paged_jit = self._wave("admit_paged", jax.jit(
                 self._admit_batch_paged, static_argnums=(11,),
                 donate_argnums=(1,)))
             # one compiled program advances a whole wave of tail/chunked
             # prefills: per-row (slot, c0, tail_len), pad rows dropped
-            self._tail_jit = self._under_mesh(jax.jit(
-                lambda params, cache, toks, slots_, c0s, clens, hb:
-                prefill_tail(self.cfg, params, self.ctx, toks,
-                             cache, slots_, c0s, clens, hist_blocks=hb),
-                static_argnums=(6,), donate_argnums=(1,)))
+            self._tail_jit = self._wave("tail", jax.jit(
+                self._tail_wave, static_argnums=(6,), donate_argnums=(1,)))
             # swap-in restore: one donated scatter for the whole payload
             # (per-leaf .at[].set calls would each materialize a second
             # pool — transient 2x cache HBM on every restore)
-            self._swap_in_jit = self._under_mesh(
-                jax.jit(self._swap_in_scatter, donate_argnums=(0,)))
-
-            def cow_copy(cache, src, dst):
-                def cp(path, leaf):
-                    if getattr(path[-1], "key", None) in _POOL_KEYS:
-                        return copy_pool_blocks(leaf, src, dst)
-                    return leaf
-                return jax.tree_util.tree_map_with_path(cp, cache)
-
+            self._swap_in_jit = self._wave("swap_in", jax.jit(
+                self._swap_in_scatter, donate_argnums=(0,)))
             # donated so the COW clone rewrites pool blocks in place
             # instead of materializing a second pool
-            self._cow_jit = self._under_mesh(
-                jax.jit(cow_copy, donate_argnums=(0,)))
+            self._cow_jit = self._wave("cow", jax.jit(
+                self._cow_copy, donate_argnums=(0,)))
         if self.spec is not None:
             # draft loop: k+1 draft decode steps in one compiled scan
             # (the last step only commits the final proposal's KV)
-            self._draft_jit = self._under_mesh(
-                jax.jit(self._spec_draft, static_argnums=(8,),
-                        donate_argnums=(1,)))
+            self._draft_jit = self._wave("spec_draft", jax.jit(
+                self._spec_draft, static_argnums=(8,), donate_argnums=(1,)))
             # verify-wave: commit + all-position logits + acceptance +
             # rollback of the device counters, one compiled program
-            self._spec_jit = self._under_mesh(
-                jax.jit(self._spec_wave, static_argnums=(5, 6),
-                        donate_argnums=(1,)))
+            self._spec_jit = self._wave("spec_verify", jax.jit(
+                self._spec_wave, static_argnums=(5, 6), donate_argnums=(1,)))
             # draft-side admission: prefill the draft cache for freshly
             # armed decode residents
-            self._draft_admit_jit = self._under_mesh(
-                jax.jit(self._draft_admit, donate_argnums=(1,)))
+            self._draft_admit_jit = self._wave("admit_draft", jax.jit(
+                self._draft_admit, donate_argnums=(1,)))
+
+    def _wave(self, family: str, jitted):
+        """Register a compiled wave family and wrap its jit for serving.
+
+        The wrapper runs the call inside the mesh context (like
+        ``_under_mesh``) and compares the jit's compile-cache size across
+        the call: when it grew, this call traced a fresh variant, and its
+        argument shape signature is recorded. Steady-state overhead is two
+        integer reads per wave — the signature is only built on compiles.
+        """
+        self._wave_jits[family] = jitted
+        variants = self._wave_variants.setdefault(family, [])
+        mesh = self.mesh
+
+        def run(*args):
+            try:
+                before = jitted._cache_size()
+            except Exception:
+                before = None
+            if mesh is not None:
+                with mesh:
+                    out = jitted(*args)
+            else:
+                out = jitted(*args)
+            if before is not None:
+                try:
+                    grew = jitted._cache_size() > before
+                except Exception:
+                    grew = False
+                if grew:
+                    variants.append(_arg_signature(args))
+            return out
+        return run
+
+    def _tail_wave(self, params, cache, toks, slots_, c0s, clens, hb):
+        """Tail-wave forward: one batched ``prefill_tail`` window over
+        every in-progress tail/chunked prefill (per-row slot/c0/len)."""
+        return prefill_tail(self.cfg, params, self.ctx, toks, cache,
+                            slots_, c0s, clens, hist_blocks=hb)
+
+    def _cow_copy(self, cache, src, dst):
+        """Copy-on-write block clone: pool leaves copy ``src`` block rows
+        onto ``dst`` (sentinel dsts drop), everything else passes through."""
+        def cp(path, leaf):
+            if getattr(path[-1], "key", None) in _POOL_KEYS:
+                return copy_pool_blocks(leaf, src, dst)
+            return leaf
+        return jax.tree_util.tree_map_with_path(cp, cache)
 
     def _under_mesh(self, fn):
         """Wrap a compiled program so it traces and runs inside the mesh
@@ -1977,5 +2037,182 @@ class ServeEngine:
         d["cache_bytes"] = self._cache_bytes
         d["peak_cache_bytes"] = int(
             self._cache_bytes * d["peak_cache_tokens"] / max(cap_tokens, 1))
+        d["compile_variants"] = self.compile_variant_counts()
         d.update(self.scheduler.stats())
         return d
+
+    # ------------------------------------------------------------------
+    # Compiled-graph introspection (the `repro.analysis` audit surface)
+    # ------------------------------------------------------------------
+
+    def compile_variant_counts(self) -> Dict[str, int]:
+        """Live compiled-variant count per wave family — fresh compiles
+        observed through the ``_wave`` registry since construction. The
+        retrace-budget audit and operators read the same numbers."""
+        return {f: len(v) for f, v in self._wave_variants.items()}
+
+    def wave_variant_signatures(self) -> Dict[str, List[str]]:
+        """Per-family shape signatures of every call that compiled a new
+        variant, in compile order — names the offending shape when a
+        family blows its retrace budget."""
+        return {f: list(v) for f, v in self._wave_variants.items()}
+
+    def pool_shard_elems(self) -> int:
+        """Per-device element count of the largest int8 cache plane —
+        the reference size for the dequant-placement audit (a wholesale
+        dequant materializes at least one full plane in floats)."""
+        best = 0
+        for leaf in jax.tree.leaves(self.state["cache"]):
+            if leaf.dtype != jnp.int8:
+                continue
+            sh = getattr(leaf, "sharding", None)
+            if sh is not None and hasattr(sh, "shard_shape"):
+                n = int(np.prod(sh.shard_shape(leaf.shape)))
+            else:
+                n = int(leaf.size)
+            best = max(best, n)
+        return best
+
+    def compiled_waves(self, buckets: int = 1) -> List[Dict]:
+        """Enumerate every live wave family as an auditable unit.
+
+        Each entry is a plain dict (no analysis import here — the
+        auditor duck-types engines):
+
+          family   — registry name ("decode", "admit_paged", ...)
+          label    — family plus the representative statics
+          lower    — zero-arg closure returning the ``jax.jit(...).lower``
+                     of one representative call, built from
+                     ``ShapeDtypeStruct``s that mirror the live arrays
+                     (shapes, dtypes, shardings) — nothing materializes
+          donated  — leaf inventory of the donated argument(s):
+                     [{path, dtype, bytes}] with per-device byte counts,
+                     so the donation rule can name a leaked plane
+
+        ``buckets`` enumerates that many power-of-two prefill length
+        buckets (L = prefill_bucket * 2**b) for the admission families.
+        Fresh jit objects are lowered, so the serving jits' compile
+        caches — and ``compile_variant_counts`` — are untouched.
+        """
+        def sds(tree):
+            return jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(
+                    a.shape, a.dtype, sharding=getattr(a, "sharding", None)),
+                tree)
+
+        def arr(shape, dtype):
+            return jax.ShapeDtypeStruct(shape, dtype)
+
+        def inventory(tree) -> List[Dict]:
+            flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+            out = []
+            for path, a in flat:
+                sh = getattr(a, "sharding", None)
+                if sh is not None and hasattr(sh, "shard_shape"):
+                    n = int(np.prod(sh.shard_shape(a.shape)))
+                else:
+                    n = int(np.prod(a.shape))
+                dt = np.dtype(a.dtype)
+                out.append({"path": jax.tree_util.keystr(path),
+                            "dtype": dt.name, "bytes": n * dt.itemsize})
+            return out
+
+        params = sds(self.params)
+        state = sds(self.state)
+        cache = state["cache"]
+        S = self.slots
+        mesh = self.mesh
+        waves: List[Dict] = []
+
+        def add(family, fn, args, *, static_argnums=(), donate_argnums=(),
+                label=None):
+            jitted = jax.jit(fn, static_argnums=static_argnums,
+                             donate_argnums=donate_argnums)
+
+            def lower(jitted=jitted, args=args):
+                if mesh is not None:
+                    with mesh:
+                        return jitted.lower(*args)
+                return jitted.lower(*args)
+
+            donated: List[Dict] = []
+            for dn in donate_argnums:
+                donated += inventory(args[dn])
+            waves.append({"family": family, "label": label or family,
+                          "lower": lower, "donated": donated})
+
+        add("decode", self._decode_chunk, (params, state, False),
+            static_argnums=(2,), donate_argnums=(1,),
+            label="decode[greedy=False]")
+        for b in range(max(buckets, 1)):
+            L = self.prefill_bucket * (1 << b)
+            n_pad = min(_pow2_ceil(S), S)
+            common = (arr((n_pad, L), jnp.int32), arr((n_pad,), jnp.int32),
+                      arr((n_pad,), jnp.int32))
+            tail = (arr((n_pad,), jnp.int32), arr((n_pad,), jnp.int32),
+                    arr((n_pad,), jnp.float32), arr((n_pad,), jnp.int32),
+                    arr((n_pad, 2), jnp.uint32), False)
+            if self._paged:
+                nb = self.alloc.blocks_for_tokens(L)
+                add("admit_paged", self._admit_batch_paged,
+                    (params, state, *common, arr((n_pad, nb), jnp.int32),
+                     *tail),
+                    static_argnums=(11,), donate_argnums=(1,),
+                    label=f"admit_paged[n={n_pad},L={L}]")
+            else:
+                add("admit_dense", self._admit_batch,
+                    (params, state, *common, *tail),
+                    static_argnums=(10,), donate_argnums=(1,),
+                    label=f"admit_dense[n={n_pad},L={L}]")
+        if self._paged:
+            C = self.prefill_chunk
+            hb = min(_pow2_ceil(self.alloc.blocks_for_tokens(C)),
+                     self.table_len)
+            add("tail", self._tail_wave,
+                (params, cache, arr((1, C), jnp.int32),
+                 arr((1,), jnp.int32), arr((1,), jnp.int32),
+                 arr((1,), jnp.int32), hb),
+                static_argnums=(6,), donate_argnums=(1,),
+                label=f"tail[rows=1,C={C},hb={hb}]")
+            payloads = []
+            for layer in self._attn_layer_caches():
+                pay = {}
+                for k in _POOL_KEYS:
+                    shape = list(layer["self"][k].shape)
+                    shape[1] = 1            # m_pad=1 restored blocks
+                    pay[k] = arr(tuple(shape), layer["self"][k].dtype)
+                payloads.append(pay)
+            add("swap_in", self._swap_in_scatter,
+                (cache, payloads, arr((1,), jnp.int32),
+                 arr((), jnp.int32), arr((), jnp.int32)),
+                donate_argnums=(0,), label="swap_in[m=1]")
+            add("cow", self._cow_copy,
+                (cache, arr((1,), jnp.int32), arr((1,), jnp.int32)),
+                donate_argnums=(0,), label="cow[n=1]")
+        if self.spec is not None:
+            dparams = sds(self.draft_params)
+            dcache = sds(self._draft_cache)
+            k = self.spec.k
+            add("spec_draft", self._spec_draft,
+                (dparams, dcache, arr((S, 1), jnp.int32),
+                 arr((S,), jnp.float32), arr((S,), jnp.int32),
+                 arr((S, 2), jnp.uint32), arr((S,), jnp.int32),
+                 arr((S,), jnp.int32), False),
+                static_argnums=(8,), donate_argnums=(1,),
+                label="spec_draft[greedy=False]")
+            dq = (arr((S, k, self.cfg.vocab_size), jnp.float32)
+                  if self.spec.accept_mode == "rejection" else None)
+            hb = min(_pow2_ceil(self.alloc.blocks_for_tokens(
+                self.max_seq_len)), self.table_len)
+            add("spec_verify", self._spec_wave,
+                (params, state, arr((S, k), jnp.int32), dq,
+                 arr((S,), jnp.int32), hb, False),
+                static_argnums=(5, 6), donate_argnums=(1,),
+                label=f"spec_verify[hb={hb},greedy=False]")
+            n_pad = min(_pow2_ceil(S), S)
+            L = self.prefill_bucket
+            add("admit_draft", self._draft_admit,
+                (dparams, dcache, arr((n_pad, L), jnp.int32),
+                 arr((n_pad,), jnp.int32), arr((n_pad,), jnp.int32)),
+                donate_argnums=(1,), label=f"admit_draft[n={n_pad},L={L}]")
+        return waves

@@ -1,0 +1,158 @@
+"""Integration: the serve-graph auditor over a real engine.
+
+One module-scoped paged engine serves a short workload (so the wave
+registry holds live compile-variant counts), then ``audit_engine``
+compiles every wave family abstractly and checks the full rule set —
+the same path ``tools/audit_serve.py`` gates in CI. Seeded violations
+rebuild a real wave the wrong way (donation dropped, host callback
+injected, budget zeroed) and prove the rules fire on engine-shaped
+programs, not just synthetic HLO.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (DonationRule, HostTransferRule,
+                            RetraceBudgetRule, audit_engine,
+                            engine_audit_ctx)
+from repro.configs import get_reduced_config
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+PAGED_KW = dict(slots=4, kv_layout="paged", block_size=16, num_blocks=128,
+                max_seq_len=128, prefill_bucket=16, decode_block=4,
+                max_new_cap=32)
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=getattr(a, "sharding", None)),
+        tree)
+
+
+@pytest.fixture(scope="module")
+def eng(rng):
+    cfg = get_reduced_config("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    eng = ServeEngine(cfg, params, **PAGED_KW)
+    # mixed greedy/sampled so the decode family compiles both variants
+    for i in range(5):
+        eng.submit(Request(uid=i,
+                           prompt=np.arange(1, 10 + i, dtype=np.int32) % 60,
+                           max_new_tokens=4,
+                           temperature=0.8 if i % 2 else 0.0, seed=i))
+    eng.run_until_drained()
+    return eng
+
+
+@pytest.fixture(scope="module")
+def report(eng):
+    return audit_engine(eng)
+
+
+class TestCleanAudit:
+    def test_every_wave_passes_every_rule(self, report):
+        assert report.ok, report.render()
+
+    def test_every_live_family_enumerated(self, report):
+        fams = {w.split("[")[0] for w in report.waves}
+        assert {"decode", "admit_paged", "tail", "swap_in",
+                "cow"} <= fams
+
+    def test_matrix_fully_populated(self, report):
+        # every wave-scope rule produced a verdict for every wave
+        for wave in report.waves:
+            if wave == "(engine)":
+                continue
+            for rule in ("donation", "host-transfer", "dequant-placement",
+                         "collectives"):
+                assert report.cells[(rule, wave)] == "ok"
+
+    def test_json_artifact_shape(self, report):
+        js = report.to_json()
+        assert js["ok"] is True
+        assert set(js["matrix"]) == set(report.rules)
+        assert js["meta"]["compile_variants"]["decode"] == 2
+
+
+class TestLiveVariantCounts:
+    """Satellite bugfix: engine.stats() surfaces live per-family compile
+    counts, and the retrace rule reads the same numbers."""
+
+    def test_stats_reports_compile_variants(self, eng):
+        cv = eng.stats()["compile_variants"]
+        assert cv == eng.compile_variant_counts()
+        # mixed greedy/sampled workload → both decode variants compiled
+        assert cv["decode"] == 2
+        assert cv["admit_paged"] >= 1
+        assert cv["tail"] >= 1
+
+    def test_signatures_recorded_per_compile(self, eng):
+        sigs = eng.wave_variant_signatures()
+        assert len(sigs["decode"]) == 2
+        # one greedy, one sampled trace — distinguished by the static
+        assert {s.rsplit(", ", 1)[-1] for s in sigs["decode"]} == \
+            {"True)", "False)"}
+
+    def test_budget_zeroed_fires_with_real_signature(self, eng):
+        ctx = engine_audit_ctx(eng, budgets={"decode": 0})
+        vs = RetraceBudgetRule().check_engine(ctx)
+        assert vs and "'decode' compiled 2 variants, budget 0" \
+            in vs[0].summary
+        assert any("tree#" in s for s in vs[0].sites)
+
+
+class TestSeededEngineViolations:
+    def test_undonated_decode_wave_leaks_the_pool(self, eng):
+        # same decode program, donation dropped: the large state leaves
+        # (pool planes included) vanish from the alias table
+        wave = next(w for w in eng.compiled_waves()
+                    if w["family"] == "decode")
+        hlo = jax.jit(eng._decode_chunk, static_argnums=(2,)).lower(
+            _sds(eng.params), _sds(eng.state), False).compile().as_text()
+        vs = DonationRule().check({**wave, "hlo": hlo}, {})
+        assert vs, "dropping donation must fire the donation rule"
+        assert any("k_q" in s or "v_q" in s for s in vs[0].sites), \
+            "the leaked int8 pool planes should be named"
+
+    def test_injected_host_callback_in_wave_body(self, eng):
+        from jax.experimental import io_callback
+        orig = type(eng)._decode_chunk
+
+        def poisoned(params, state, greedy_only):
+            io_callback(lambda v: None, None, state["tokens"])
+            return orig(eng, params, state, greedy_only)
+
+        eng._decode_chunk = poisoned       # instance attr shadows method
+        try:
+            wave = next(w for w in eng.compiled_waves()
+                        if w["family"] == "decode")
+            hlo = wave["lower"]().compile().as_text()
+        finally:
+            del eng._decode_chunk
+        vs = HostTransferRule().check({**wave, "hlo": hlo}, {})
+        assert vs and "host" in vs[0].summary
+
+
+class TestCli:
+    @pytest.mark.slow
+    def test_cli_clean_run_writes_artifact(self, tmp_path):
+        import importlib.util
+        from pathlib import Path
+        root = Path(__file__).resolve().parents[1]
+        spec = importlib.util.spec_from_file_location(
+            "audit_serve", root / "tools" / "audit_serve.py")
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        out = tmp_path / "audit.json"
+        # pool sized so legit tail-wave activations stay under the
+        # dequant threshold (smaller pools would false-positive)
+        rc = mod.main(["--slots", "2", "--num-blocks", "128",
+                       "--max-seq-len", "64", "--no-workload",
+                       "--out", str(out)])
+        assert rc == 0
+        import json
+        js = json.loads(out.read_text())
+        assert js["ok"] is True and js["violations"] == []

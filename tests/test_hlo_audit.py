@@ -1,0 +1,288 @@
+"""Unit tests for the audit walkers in ``runtime/hlo_analysis`` and the
+``repro.analysis`` rule set against crafted programs/HLO.
+
+Covers the alias-table and entry-parameter parsers, host-transfer and
+float-intermediate detection, the unknown-dtype flag-and-skip path, the
+trip-count-recovery fallback (unrecoverable ``while`` condition →
+multiplier 1 + flagged), and each rule's seeded-violation firing over
+synthetic waves — no engine construction, so this file stays fast.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (CollectiveCensusRule, DequantPlacementRule,
+                            DonationRule, HostTransferRule,
+                            RetraceBudgetRule, audit_waves, default_rules)
+from repro.runtime.hlo_analysis import (analyze_collectives, analyze_program,
+                                        collective_sites, entry_parameters,
+                                        float_intermediate_sites,
+                                        host_transfer_sites,
+                                        input_output_aliases)
+
+
+def _compile(fn, *args, **jit_kw):
+    return jax.jit(fn, **jit_kw).lower(*args).compile().as_text()
+
+
+F32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+S8 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int8)      # noqa: E731
+
+
+class TestAliasWalkers:
+    def test_donated_arg_appears_in_alias_table(self):
+        hlo = _compile(lambda x, y: (x + y, x - y), F32(64, 64), F32(64, 64),
+                       donate_argnums=(0,))
+        aliases = input_output_aliases(hlo)
+        assert any(a["param"] == 0 for a in aliases)
+
+    def test_undonated_program_has_no_aliases(self):
+        hlo = _compile(lambda x, y: x + y, F32(64, 64), F32(64, 64))
+        assert input_output_aliases(hlo) == []
+
+    def test_donated_pytree_aliases_every_leaf(self):
+        state = {"a": F32(32, 32), "b": S8(64, 64)}
+        hlo = _compile(lambda s: {"a": s["a"] * 2, "b": s["b"] + 1},
+                       state, donate_argnums=(0,))
+        assert len(input_output_aliases(hlo)) == 2
+
+    def test_entry_parameters_report_bytes_and_names(self):
+        hlo = _compile(lambda x, y: x + y, F32(128, 64), F32(128, 64))
+        params = entry_parameters(hlo)
+        assert [p["num"] for p in params] == [0, 1]
+        assert all(p["dtype"] == "f32" for p in params)
+        assert all(p["bytes"] == 128 * 64 * 4 for p in params)
+        # jax records the argument path in op_name metadata
+        assert params[0]["op_name"] == "x"
+
+
+class TestHostTransferWalker:
+    def test_io_callback_flagged(self):
+        from jax.experimental import io_callback
+
+        def f(x):
+            io_callback(lambda v: None, None, x)
+            return x * 2
+
+        sites = host_transfer_sites(_compile(f, F32(8,)))
+        assert sites and any("callback" in s["reason"] for s in sites)
+
+    def test_pure_wave_clean(self):
+        hlo = _compile(lambda x: jnp.tanh(x) @ x.T, F32(32, 32))
+        assert host_transfer_sites(hlo) == []
+
+
+class TestFloatIntermediates:
+    def test_wholesale_dequant_found(self):
+        def f(pool):
+            return (pool.astype(jnp.bfloat16) * 2.0).sum()
+
+        hlo = _compile(f, S8(256, 256))
+        sites = float_intermediate_sites(hlo, 256 * 256)
+        assert sites and sites[0]["elems"] >= 256 * 256
+        assert sites[0]["dtype"] in ("bf16", "f32")
+
+    def test_threshold_excludes_small(self):
+        hlo = _compile(lambda p: (p.astype(jnp.bfloat16) * 2.0).sum(),
+                       S8(16, 16))
+        assert float_intermediate_sites(hlo, 1 << 20) == []
+
+
+class TestUnknownDtypes:
+    """Satellite: unknown dtype tokens flag-and-skip into an explicit
+    ``unknown_dtypes`` field instead of silently undercounting."""
+
+    def _fake(self):
+        hlo = _compile(lambda x, y: x + y, F32(128, 64), F32(128, 64))
+        return hlo.replace("f32[128,64]", "f8e4m3[128,64]")
+
+    def test_analyze_program_flags(self):
+        rep = analyze_program(self._fake())
+        assert rep["unknown_dtypes"] == ["f8e4m3"]
+
+    def test_analyze_collectives_field_present(self):
+        rep = analyze_collectives(self._fake())
+        assert "unknown_dtypes" in rep
+
+    def test_collective_sites_per_site_flag(self):
+        hlo = ("ENTRY %main (p0: f8e4m3[64]) -> f8e4m3[64] {\n"
+               "  %p0 = f8e4m3[64]{0} parameter(0)\n"
+               "  ROOT %ag = f8e4m3[64]{0} all-gather(%p0), dimensions={0}\n"
+               "}\n")
+        sites = collective_sites(hlo)
+        assert len(sites) == 1
+        assert sites[0]["unknown_dtypes"] == ["f8e4m3"]
+        assert sites[0]["bytes"] == 0
+
+
+class TestTripCountFallback:
+    """Satellite: unrecoverable ``while`` condition → multiplier 1 and
+    ``unresolved_loops`` flagged (previously untested)."""
+
+    # condition reads a runtime-dependent bound: no s32[] constant(N)
+    # anywhere in the condition computation, so recovery must fall back
+    _HLO = """\
+%cond (arg: (s32[], s32[], f32[8])) -> pred[] {
+  %arg = (s32[], s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] get-tuple-element(%arg), index=1
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (barg: (s32[], s32[], f32[8])) -> (s32[], s32[], f32[8]) {
+  %barg = (s32[], s32[], f32[8]) parameter(0)
+  %bi = s32[] get-tuple-element(%barg), index=0
+  %bn = s32[] get-tuple-element(%barg), index=1
+  %bx = f32[8] get-tuple-element(%barg), index=2
+  %ar = f32[8] all-reduce(%bx), to_apply=%add
+  ROOT %t = (s32[], s32[], f32[8]) tuple(%bi, %bn, %ar)
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: (s32[], s32[], f32[8])) -> (s32[], s32[], f32[8]) {
+  %p = (s32[], s32[], f32[8]) parameter(0)
+  ROOT %w = (s32[], s32[], f32[8]) while(%p), condition=%cond, body=%body
+}
+"""
+
+    def test_unresolved_flagged_and_multiplier_one(self):
+        rep = analyze_collectives(self._HLO)
+        assert rep["unresolved_loops"] == 1
+        # multiplier fell back to 1: the all-reduce counts its bytes once
+        assert rep["total_bytes"] == 8 * 4
+        assert rep["per_site"][0]["mult"] == 1.0
+
+    def test_recoverable_loop_still_multiplies(self):
+        hlo = self._HLO.replace(
+            "%n = s32[] get-tuple-element(%arg), index=1",
+            "%n = s32[] constant(7)")
+        rep = analyze_collectives(hlo)
+        assert rep["unresolved_loops"] == 0
+        assert rep["total_bytes"] == 7 * 8 * 4
+
+
+# --------------------------------------------------------------------------
+# Seeded rule violations over synthetic waves (audit_waves pure core)
+# --------------------------------------------------------------------------
+
+
+def _wave(fn, *args, family="decode", label=None, donate=(), donated=None):
+    hlo = _compile(fn, *args, donate_argnums=donate)
+    return {"family": family, "label": label or family, "hlo": hlo,
+            "donated": donated or []}
+
+
+class TestSeededViolations:
+    def test_undonated_wave_fires_donation_rule(self):
+        # the wave *claims* a donated pool leaf, but the jit never donated
+        # it — no alias table entry, so the rule must fire and name it
+        nbytes = 256 * 256
+        wave = _wave(lambda s: {"pool": s["pool"] + 1},
+                     {"pool": S8(256, 256)},
+                     donated=[{"path": "['pool']", "dtype": "int8",
+                               "bytes": nbytes}])
+        vs = DonationRule(min_bytes=1 << 10).check(wave, {})
+        assert vs and "pool" in vs[0].sites[0]
+        assert str(nbytes) in vs[0].summary
+
+    def test_donated_wave_passes_donation_rule(self):
+        nbytes = 256 * 256
+        wave = _wave(lambda s: {"pool": s["pool"] + 1},
+                     {"pool": S8(256, 256)}, donate=(0,),
+                     donated=[{"path": "['pool']", "dtype": "int8",
+                               "bytes": nbytes}])
+        assert DonationRule(min_bytes=1 << 10).check(wave, {}) == []
+
+    def test_host_callback_fires_host_transfer_rule(self):
+        from jax.experimental import io_callback
+
+        def f(x):
+            io_callback(lambda v: None, None, x)
+            return x * 2
+
+        vs = HostTransferRule().check(_wave(f, F32(8,)), {})
+        assert vs and "host" in vs[0].summary
+
+    def test_full_pool_dequant_fires_dequant_rule(self):
+        pool_elems = 256 * 256
+        wave = _wave(lambda p: (p.astype(jnp.bfloat16) * 2.0).sum(),
+                     S8(256, 256))
+        vs = DequantPlacementRule(frac=0.5).check(
+            wave, {"pool_elems": pool_elems})
+        assert vs and "dequantized outside" in vs[0].summary
+
+    def test_windowed_dequant_passes_dequant_rule(self):
+        # dequantizing a 1/16 window of the pool is the sanctioned pattern
+        wave = _wave(lambda p: (p[:16].astype(jnp.bfloat16) * 2.0).sum(),
+                     S8(256, 256))
+        assert DequantPlacementRule(frac=0.5).check(
+            wave, {"pool_elems": 256 * 256}) == []
+
+    def test_budget_overflow_fires_and_names_signature(self):
+        ctx = {"variant_counts": {"decode": 3},
+               "variant_signatures": {"decode": ["(a)", "(b)", "(c)"]},
+               "budgets": {"decode": 2}}
+        vs = RetraceBudgetRule().check_engine(ctx)
+        assert vs and "decode" in vs[0].summary
+        assert any("(c)" in s for s in vs[0].sites)
+        ctx["variant_counts"]["decode"] = 2
+        assert RetraceBudgetRule().check_engine(ctx) == []
+
+    def test_s8_pool_gather_fires_census_rule(self):
+        hlo = ("ENTRY %main (p0: s8[524288]) -> s8[1048576] {\n"
+               "  %p0 = s8[524288]{0} parameter(0)\n"
+               "  ROOT %ag = s8[1048576]{0} all-gather(%p0), dimensions={0}\n"
+               "}\n")
+        wave = {"family": "tail", "label": "tail", "hlo": hlo, "donated": []}
+        vs = CollectiveCensusRule().check(wave, {"tp": 2})
+        assert vs and "regathered" in vs[0].summary
+
+    def test_tp1_wave_with_collective_fires(self):
+        hlo = ("ENTRY %main (p0: f32[8]) -> f32[8] {\n"
+               "  %p0 = f32[8]{0} parameter(0)\n"
+               "  ROOT %ar = f32[8]{0} all-reduce(%p0), to_apply=%add\n"
+               "}\n")
+        wave = {"family": "decode", "label": "decode", "hlo": hlo,
+                "donated": []}
+        assert CollectiveCensusRule().check(wave, {"tp": 1})
+
+    def test_tp2_decode_without_allreduce_fires(self):
+        wave = _wave(lambda x: x * 2, F32(8,), family="decode")
+        vs = CollectiveCensusRule().check(wave, {"tp": 2})
+        assert vs and "no all-reduce" in vs[0].summary
+
+
+class TestAuditReport:
+    def test_matrix_and_json_roundtrip(self):
+        from jax.experimental import io_callback
+
+        def dirty(x):
+            io_callback(lambda v: None, None, x)
+            return x + 1
+
+        waves = [_wave(lambda x: x + 1, F32(8,), family="decode",
+                       label="clean"),
+                 _wave(dirty, F32(8,), family="tail", label="dirty")]
+        report = audit_waves(waves, default_rules(), {"tp": 1})
+        assert not report.ok
+        assert report.cells[("host-transfer", "clean")] == "ok"
+        assert report.cells[("host-transfer", "dirty")] == "FAIL"
+        txt = report.render()
+        assert "FAIL" in txt and "clean" in txt
+        js = report.to_json()
+        assert js["ok"] is False
+        assert js["matrix"]["host-transfer"]["dirty"] == "FAIL"
+        assert js["violations"][0]["rule"] == "host-transfer"
+
+    def test_clean_report_ok(self):
+        waves = [_wave(lambda x: x + 1, F32(8,), label="w")]
+        report = audit_waves(waves, default_rules(),
+                             {"tp": 1, "budgets": {}, "variant_counts": {}})
+        assert report.ok
+        assert "clean" in report.render()

@@ -287,6 +287,14 @@ class TestW4A8ServeParity:
 
 class TestServePathLint:
     def test_no_weight_einsum_outside_funnel(self):
+        from pathlib import Path
+        from repro.analysis.w4a8_lint import check_static
+        root = Path(__file__).resolve().parents[1]
+        assert check_static(root) == []
+
+    def test_tool_shim_keeps_api(self):
+        # the tools/ CLI is a shim over repro.analysis.w4a8_lint; external
+        # callers (CI, scripts) rely on its module-level API surviving
         import importlib.util
         from pathlib import Path
         root = Path(__file__).resolve().parents[1]
@@ -295,3 +303,4 @@ class TestServePathLint:
         mod = importlib.util.module_from_spec(spec)
         spec.loader.exec_module(mod)
         assert mod.check_static(root) == []
+        assert callable(mod.main) and callable(mod.check_runtime)
