@@ -1,0 +1,124 @@
+"""Live serving dashboard from ``GET /v1/metrics`` (stdlib only).
+
+Start a server first, e.g.::
+
+    PYTHONPATH=src python -m repro.launch.serve \\
+        --arch qwen2.5-3b --kv-layout paged --http-port 8000
+
+then point this at it (drive load with ``examples/stream_client.py`` or
+the streaming benchmark to see the numbers move)::
+
+    python examples/scrape_metrics.py --port 8000 --interval 1.0
+
+Each tick scrapes the Prometheus endpoint and prints one dashboard
+line: decode rate derived from counter deltas between scrapes (how a
+real Prometheus ``rate()`` works), resident/pending/swapped occupancy
+gauges, pool fill, and p95 TTFT estimated from the cumulative histogram
+buckets. ``--once`` prints the raw exposition text and exits (the
+"is my scrape config right?" probe).
+
+The endpoint speaks standard exposition format, so the same URL drops
+into a real Prometheus scrape job unchanged; this script exists so you
+can watch an engine without standing one up. Parsing lives in
+``repro.obs.metrics.parse_prometheus`` — but since examples run without
+``PYTHONPATH=src``, a local fallback parser keeps this file standalone.
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import sys
+import time
+
+try:
+    from repro.obs.metrics import parse_prometheus
+except ImportError:                    # standalone: minimal local parser
+    def parse_prometheus(text):
+        out = {}
+        for line in text.splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            name, _, value = line.rpartition(" ")
+            out[name] = float(value)
+        return out
+
+
+def scrape(host: str, port: int, timeout: float = 5.0) -> str:
+    """One GET /v1/metrics over a raw socket; returns the body text."""
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.sendall(f"GET /v1/metrics HTTP/1.1\r\nHost: {host}\r\n"
+                     f"Connection: close\r\n\r\n".encode())
+        raw = b""
+        while chunk := sock.recv(1 << 16):
+            raw += chunk
+    header, _, body = raw.partition(b"\r\n\r\n")
+    status = header.split(None, 2)[1]
+    if status != b"200":
+        raise RuntimeError(f"HTTP {status.decode()} from /v1/metrics")
+    return body.decode()
+
+
+def hist_p95(m: dict, name: str) -> float:
+    """p95 upper bound from cumulative ``_bucket`` samples (the same
+    estimate ``Histogram.quantile`` computes server-side)."""
+    total = m.get(f"{name}_count", 0)
+    if not total:
+        return 0.0
+    buckets = sorted(
+        (float(k[k.index('le="') + 4:-2]), v) for k, v in m.items()
+        if k.startswith(f'{name}_bucket') and '+Inf' not in k)
+    for bound, cum in buckets:
+        if cum >= 0.95 * total:
+            return bound
+    return buckets[-1][0] if buckets else 0.0
+
+
+def dash_line(m: dict, prev: dict, dt: float) -> str:
+    def rate(key):
+        return (m.get(key, 0) - prev.get(key, 0)) / max(dt, 1e-9)
+
+    return (f"{rate('serve_tokens_out_total'):7.1f} tok/s | "
+            f"fin {int(m.get('serve_requests_finished_total', 0)):4d} "
+            f"(+{rate('serve_requests_finished_total'):.1f}/s) | "
+            f"res {int(m.get('serve_resident_requests', 0)):2d} "
+            f"pend {int(m.get('serve_pending_requests', 0)):2d} "
+            f"swap {int(m.get('serve_swapped_requests', 0)):2d} | "
+            f"pool {100 * m.get('serve_pool_occupancy', 0.0):3.0f}% | "
+            f"ttft p95 <= {1e3 * hist_p95(m, 'serve_ttft_seconds'):.0f} ms")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="poll /v1/metrics and print a one-line dashboard")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="seconds between scrapes")
+    ap.add_argument("--count", type=int, default=0,
+                    help="stop after N ticks (0 = until interrupted)")
+    ap.add_argument("--once", action="store_true",
+                    help="print the raw exposition text and exit")
+    args = ap.parse_args()
+
+    if args.once:
+        print(scrape(args.host, args.port), end="")
+        return 0
+
+    prev, prev_t, tick = {}, time.perf_counter(), 0
+    while True:
+        try:
+            m = parse_prometheus(scrape(args.host, args.port))
+        except (OSError, RuntimeError) as e:
+            print(f"scrape failed: {e}", file=sys.stderr)
+            return 1
+        now = time.perf_counter()
+        print(dash_line(m, prev, now - prev_t), flush=True)
+        prev, prev_t, tick = m, now, tick + 1
+        if args.count and tick >= args.count:
+            return 0
+        time.sleep(args.interval)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -113,14 +113,32 @@ def run_http(args, engine):
             async with ServeHTTP(fe, host=args.http_host,
                                  port=args.http_port) as srv:
                 print(f"serving on http://{args.http_host}:{srv.port} "
-                      f"(POST /v1/completions, GET /v1/stats, /health; "
-                      f"Ctrl-C to stop)")
+                      f"(POST /v1/completions, GET /v1/stats, "
+                      f"/v1/metrics, /health; Ctrl-C to stop)")
                 await srv.serve_forever()
 
     try:
         asyncio.run(go())
     except KeyboardInterrupt:
         print("\nshutting down")
+
+
+def write_obs(args, engine, stats=None):
+    """``--trace`` / ``--metrics`` epilogue shared by all three drive
+    modes (closed-loop drain, open-loop arrivals, HTTP serve)."""
+    if args.trace:
+        from repro.obs.export import write_trace
+        write_trace(args.trace, engine.trace,
+                    compile_variants=engine.wave_variant_signatures())
+        n_spans = sum(1 for e in engine.trace.events()
+                      if e["ph"] == "span")
+        print(f"wrote {args.trace}: {len(engine.trace)} trace records "
+              f"({n_spans} spans, {engine.trace.dropped} dropped) — load "
+              f"at ui.perfetto.dev or run: python tools/trace_report.py "
+              f"{args.trace}")
+    if args.metrics:
+        print(engine.metrics.render(stats if stats is not None
+                                    else engine.stats()), end="")
 
 
 def main():
@@ -229,6 +247,16 @@ def main():
                          "(Pallas on TPU, XLA ref elsewhere)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="record a runtime trace and write it here as "
+                         "Chrome/Perfetto trace_event JSON (open at "
+                         "ui.perfetto.dev; summarize with "
+                         "tools/trace_report.py). Open-loop runs trace "
+                         "the timed pass only (the warmup's records are "
+                         "cleared by the engine reset)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus text /v1/metrics serves "
+                         "at the end of the run")
     ap.add_argument("--bench-out", default="",
                     help="write the run's stats to this JSON file")
     args = ap.parse_args()
@@ -255,12 +283,17 @@ def main():
     if args.tp > 1:
         from repro.launch.mesh import make_local_mesh
         mesh = make_local_mesh(model_parallel=args.tp)
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
     engine = ServeEngine(cfg, params, policy=args.policy, slots=args.slots,
                          cache_len=args.cache_len,
                          decode_block=decode_block,
                          sched_policy=args.sched, slo_shed=args.shed,
                          max_new_cap=max(32, args.max_new),
-                         weights_layout=args.weights, mesh=mesh, **kw)
+                         weights_layout=args.weights, trace=tracer,
+                         mesh=mesh, **kw)
     if mesh is not None:
         st0 = engine.stats()
         print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} devices, "
@@ -269,6 +302,7 @@ def main():
               f"{st0['per_device_weight_bytes'] / 1e6:.2f} MB weights")
     if args.http_port:
         run_http(args, engine)
+        write_obs(args, engine)
         return
     if args.arrival_rate > 0:
         stats, dt = run_open_loop(args, engine, cfg)
@@ -306,6 +340,7 @@ def main():
                   f"(accept rate {stats['spec_accept_rate']:.2f}, "
                   f"k={stats['spec_k']}, "
                   f"draft {stats['spec_draft_layers']} layers)")
+    write_obs(args, engine, stats)
     if args.bench_out:
         with open(args.bench_out, "w") as f:
             json.dump({"args": vars(args), "stats": stats}, f, indent=2)

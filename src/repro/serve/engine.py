@@ -90,6 +90,8 @@ from repro.core.qat import (attach_w4a8_exports, attach_w4a8_ref_planes,
 from repro.kernels.kvq_attn.ops import copy_pool_blocks
 from repro.models import (decode_step, init_cache, prefill, prefill_tail,
                           spec_verify)
+from repro.obs.metrics import ServeMetrics
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.runtime.sharding import (param_shardings, serve_cache_shardings,
                                     serve_state_shardings)
 from repro.serve.block_alloc import BlockAllocator, PoolDry
@@ -121,6 +123,26 @@ def _clamp_lengths(segments, lens):
         return leaf
     return [jax.tree_util.tree_map_with_path(clamp, seg)
             for seg in segments]
+
+
+def _jsonable(x):
+    """Recursively cast numpy/jax scalars and arrays to native Python
+    types. ``stats()`` is an HTTP boundary (``/v1/stats``,
+    ``/v1/metrics``): a stray ``np.int64`` deep in the dict is invisible
+    until ``json.dumps`` raises in the server."""
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.bool_):
+        return bool(x)
+    if isinstance(x, np.integer):
+        return int(x)
+    if isinstance(x, np.floating):
+        return float(x)
+    if isinstance(x, (np.ndarray, jax.Array)):
+        return _jsonable(x.tolist())
+    return x
 
 
 # decode_block="auto" probe results, memoized per process so benchmark
@@ -206,8 +228,15 @@ class ServeEngine:
                  spec: Optional[SpecConfig] = None,
                  weights_layout: str = "bf16",
                  w4a8_backend: str = "auto",
+                 trace: Optional[Tracer] = None,
                  mesh: Optional[Mesh] = None):
         self.cfg = cfg
+        # observability rides on the engine from construction: the tracer
+        # (a disabled NULL_TRACER unless the caller wants a trace — spans
+        # still measure, nothing is recorded) and the pushed-histogram
+        # half of the /v1/metrics surface
+        self.trace = trace if trace is not None else NULL_TRACER
+        self.metrics = ServeMetrics()
         self.mesh = mesh
         self.tp = 1
         if mesh is not None:
@@ -259,7 +288,7 @@ class ServeEngine:
         self.cache_len = cache_len
         self.max_new_cap = max_new_cap
         self.prefill_bucket = prefill_bucket
-        self.scheduler = Scheduler(sched_policy)
+        self.scheduler = Scheduler(sched_policy, trace=self.trace)
         # right-padded batched prefill is exact only when every block is
         # attention (causality isolates real tokens from padding); recurrent
         # scans absorb pad steps into their state, so those admit
@@ -440,6 +469,9 @@ class ServeEngine:
                     grew = False
                 if grew:
                     variants.append(_arg_signature(args))
+                    # taint the enclosing open span so the trace-side
+                    # compile-vs-execute split matches this registry
+                    self.trace.annotate(compiled=family)
             return out
         return run
 
@@ -795,7 +827,13 @@ class ServeEngine:
         self._admit_seq: Dict[int, int] = {}     # slot -> admission order
         self._seq = 0
         self._max_residents = 0
-        self.scheduler = Scheduler(self.scheduler.policy)
+        self.scheduler = Scheduler(self.scheduler.policy, trace=self.trace)
+        # a fresh run gets a fresh observability window: reruns (the
+        # benchmark warmup→reset→timed pattern) must not inherit the
+        # previous pass's spans or histogram mass
+        self.trace.clear()
+        self.metrics.reset()
+        self._step_idx = 0
         self._pred_per_tok: Optional[float] = None   # fastest s/prompt-tok
         self._pred_round_s: Optional[float] = None   # fastest decode round
         self._host = {"decode_s": 0.0, "decode_rounds": 0,
@@ -932,6 +970,7 @@ class ServeEngine:
                                              self.slo_shed):
             r.shed = True
             r.done = True
+            self.trace.event("shed", uid=r.uid)
             self._emit_stream(r, (), done=True)
 
     @staticmethod
@@ -1194,37 +1233,47 @@ class ServeEngine:
             return jnp.asarray(v)
 
         greedy_only = all(r.temperature <= 0.0 for r in reqs)
-        t0 = time.perf_counter()
-        common = (jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(slot_idx))
-        tail = (col(lambda r: r.eos_id, -1, np.int32),
-                col(lambda r: r.max_new_tokens, 1, np.int32),
-                col(lambda r: r.temperature, 0.0, np.float32),
-                col(lambda r: r.top_k, 0, np.int32), jnp.asarray(keys),
-                greedy_only)
-        if paged:
-            # prefill emits ceil(L / block_size) blocks per row (bucket-
-            # padded); rows point their own allocated blocks at the pool
-            # and sentinel out both their tail blocks and the dummy rows
-            nb = self.alloc.blocks_for_tokens(L)
-            ids = np.full((n_pad, nb), self.num_blocks, np.int32)
-            for i, (s, r) in enumerate(zip(taken, reqs)):
-                nb_i = self.alloc.blocks_for_tokens(len(r.prompt))
-                ids[i, :nb_i] = self.alloc.tables[s, :nb_i]
-            self._push_tables()
-            self.state = self._admit_paged_jit(
-                self.params, self.state, *common, jnp.asarray(ids), *tail)
-        else:
-            self.state = self._admit_jit(self.params, self.state, *common,
-                                         *tail)
-        jax.block_until_ready(self.state["tokens"])
-        dt = time.perf_counter() - t0
-        self._host["prefill_s"] += dt
+        wave_tokens = int(sum(len(r.prompt) for r in reqs))
+        with self.trace.span("prefill_wave", rows=n, tokens=wave_tokens,
+                             paged=paged) as sp:
+            common = (jnp.asarray(toks), jnp.asarray(lens),
+                      jnp.asarray(slot_idx))
+            tail = (col(lambda r: r.eos_id, -1, np.int32),
+                    col(lambda r: r.max_new_tokens, 1, np.int32),
+                    col(lambda r: r.temperature, 0.0, np.float32),
+                    col(lambda r: r.top_k, 0, np.int32), jnp.asarray(keys),
+                    greedy_only)
+            if paged:
+                # prefill emits ceil(L / block_size) blocks per row (bucket-
+                # padded); rows point their own allocated blocks at the pool
+                # and sentinel out both their tail blocks and the dummy rows
+                nb = self.alloc.blocks_for_tokens(L)
+                ids = np.full((n_pad, nb), self.num_blocks, np.int32)
+                for i, (s, r) in enumerate(zip(taken, reqs)):
+                    nb_i = self.alloc.blocks_for_tokens(len(r.prompt))
+                    ids[i, :nb_i] = self.alloc.tables[s, :nb_i]
+                self._push_tables()
+                self.state = self._admit_paged_jit(
+                    self.params, self.state, *common, jnp.asarray(ids),
+                    *tail)
+            else:
+                self.state = self._admit_jit(self.params, self.state,
+                                             *common, *tail)
+            with self.trace.span("sync"):
+                jax.block_until_ready(self.state["tokens"])
+        self._host["prefill_s"] += sp.dt
         self._host["prefill_calls"] += 1
         self._host["prefill_tokens"] += n     # first token of each request
-        wave_tokens = int(sum(len(r.prompt) for r in reqs))
         self._host["prompt_tokens"] += wave_tokens
-        self._note_rate("_pred_per_tok", dt / max(wave_tokens, 1))
+        self._note_rate("_pred_per_tok", sp.dt / max(wave_tokens, 1))
         self.scheduler.on_admitted(reqs)
+        for r in reqs:
+            # the admission wave sampled each row's first token, so TTFT
+            # lands here (admission-wave granularity)
+            tm = getattr(r, "_timing", None)
+            if tm is not None:
+                self.metrics.observe_ttft(tm.ttft)
+            self.trace.event("first_token", uid=r.uid)
         for s, r in zip(taken, reqs):
             self._slot_req[s] = r
             if self._paged:
@@ -1247,86 +1296,96 @@ class ServeEngine:
         can't freeze everyone else's inter-token latency. Rows whose final
         window completes sample their first token and arm their slots
         together, exactly like a batched admission."""
-        t0 = time.perf_counter()
         C = self.prefill_chunk
-        ready: List[Dict] = []
-        lens: List[int] = []
-        for job in list(self._tail_jobs):
-            slot, c0 = job["slot"], job["c0"]
-            cl = min(C, len(job["req"].prompt) - c0)
-            # growth/COW may swap the job itself out on a dry pool
-            # (_preempt_for never victimizes tail jobs, so jobs in this
-            # loop can't evict each other)
-            if not self._ensure(slot, c0 + cl):
-                continue
-            if not self._cow_guard(slot, c0, c0 + cl):
-                continue
-            ready.append(job)
-            lens.append(cl)
+        with self.trace.span("schedule", kind="tail"):
+            ready: List[Dict] = []
+            lens: List[int] = []
+            for job in list(self._tail_jobs):
+                slot, c0 = job["slot"], job["c0"]
+                cl = min(C, len(job["req"].prompt) - c0)
+                # growth/COW may swap the job itself out on a dry pool
+                # (_preempt_for never victimizes tail jobs, so jobs in this
+                # loop can't evict each other)
+                if not self._ensure(slot, c0 + cl):
+                    continue
+                if not self._cow_guard(slot, c0, c0 + cl):
+                    continue
+                ready.append(job)
+                lens.append(cl)
         if not ready:
             return
-        self._push_tables()
         n = len(ready)
-        n_pad = min(_pow2_ceil(n), self.slots)
-        toks = np.zeros((n_pad, C), np.int32)
-        slots_arr = np.full((n_pad,), self.slots, np.int32)   # pad: dropped
-        c0s = np.zeros((n_pad,), np.int32)
-        clens = np.zeros((n_pad,), np.int32)
-        hb_need = 1
-        for i, (job, cl) in enumerate(zip(ready, lens)):
-            c0 = job["c0"]
-            toks[i, :cl] = job["req"].prompt[c0:c0 + cl]
-            slots_arr[i] = job["slot"]
-            c0s[i] = c0
-            clens[i] = cl
-            # table walk bounded by the tokens the deepest row can touch,
-            # bucketed to a power of two to bound compile variants
-            hb_need = max(hb_need, self.alloc.blocks_for_tokens(c0 + C))
-        hb = min(_pow2_ceil(hb_need), self.table_len)
-        logits, self.state["cache"] = self._tail_jit(
-            self.params, self.state["cache"], jnp.asarray(toks),
-            jnp.asarray(slots_arr), jnp.asarray(c0s), jnp.asarray(clens),
-            hb)
-        self._host["prefill_chunks"] += n
-        self._host["prompt_tokens"] += int(sum(lens))
         done: List[Dict] = []
-        rows: List[int] = []
-        for i, (job, cl) in enumerate(zip(ready, lens)):
-            job["c0"] += cl
-            self.alloc.register_prefix(job["slot"], job["req"].prompt,
-                                       job["c0"])
-            if job["c0"] >= len(job["req"].prompt):
-                done.append(job)
-                rows.append(i)
+        with self.trace.span("tail_wave", rows=n,
+                             tokens=int(sum(lens))) as sp:
+            self._push_tables()
+            n_pad = min(_pow2_ceil(n), self.slots)
+            toks = np.zeros((n_pad, C), np.int32)
+            slots_arr = np.full((n_pad,), self.slots, np.int32)  # pad: drop
+            c0s = np.zeros((n_pad,), np.int32)
+            clens = np.zeros((n_pad,), np.int32)
+            hb_need = 1
+            for i, (job, cl) in enumerate(zip(ready, lens)):
+                c0 = job["c0"]
+                toks[i, :cl] = job["req"].prompt[c0:c0 + cl]
+                slots_arr[i] = job["slot"]
+                c0s[i] = c0
+                clens[i] = cl
+                # table walk bounded by the tokens the deepest row can
+                # touch, bucketed to a power of two to bound variants
+                hb_need = max(hb_need, self.alloc.blocks_for_tokens(c0 + C))
+            hb = min(_pow2_ceil(hb_need), self.table_len)
+            logits, self.state["cache"] = self._tail_jit(
+                self.params, self.state["cache"], jnp.asarray(toks),
+                jnp.asarray(slots_arr), jnp.asarray(c0s),
+                jnp.asarray(clens), hb)
+            self._host["prefill_chunks"] += n
+            self._host["prompt_tokens"] += int(sum(lens))
+            rows: List[int] = []
+            for i, (job, cl) in enumerate(zip(ready, lens)):
+                job["c0"] += cl
+                self.alloc.register_prefix(job["slot"], job["req"].prompt,
+                                           job["c0"])
+                if job["c0"] >= len(job["req"].prompt):
+                    done.append(job)
+                    rows.append(i)
+            if done:
+                reqs = [j["req"] for j in done]
+                keys = jnp.asarray(np.stack(
+                    [jax.random.fold_in(jax.random.PRNGKey(r.seed), r.uid)
+                     for r in reqs]))
+                temp = jnp.asarray([r.temperature for r in reqs],
+                                   jnp.float32)
+                top_k = jnp.asarray([r.top_k for r in reqs], jnp.int32)
+                first = sample_tokens(
+                    logits[np.asarray(rows)],
+                    fold_step(keys, jnp.zeros((len(done),), jnp.int32)),
+                    temp, top_k,
+                    greedy_only=all(r.temperature <= 0.0 for r in reqs))
+                self.state = self._post_prefill_state(
+                    self.state, self.state["cache"], first,
+                    jnp.asarray([j["slot"] for j in done], jnp.int32),
+                    jnp.asarray([r.eos_id for r in reqs], jnp.int32),
+                    jnp.asarray([r.max_new_tokens for r in reqs],
+                                jnp.int32),
+                    temp, top_k, keys)
+                with self.trace.span("sync"):
+                    jax.block_until_ready(self.state["tokens"])
+            else:
+                with self.trace.span("sync"):
+                    jax.block_until_ready(self.state["cache"]["position"])
+        self._host["prefill_s"] += sp.dt
+        self._note_rate("_pred_per_tok", sp.dt / max(int(sum(lens)), 1))
         if not done:
-            jax.block_until_ready(self.state["cache"]["position"])
-            dt = time.perf_counter() - t0
-            self._host["prefill_s"] += dt
-            self._note_rate("_pred_per_tok", dt / max(int(sum(lens)), 1))
             return
-        reqs = [j["req"] for j in done]
-        keys = jnp.asarray(np.stack(
-            [jax.random.fold_in(jax.random.PRNGKey(r.seed), r.uid)
-             for r in reqs]))
-        temp = jnp.asarray([r.temperature for r in reqs], jnp.float32)
-        top_k = jnp.asarray([r.top_k for r in reqs], jnp.int32)
-        first = sample_tokens(
-            logits[np.asarray(rows)],
-            fold_step(keys, jnp.zeros((len(done),), jnp.int32)), temp,
-            top_k, greedy_only=all(r.temperature <= 0.0 for r in reqs))
-        self.state = self._post_prefill_state(
-            self.state, self.state["cache"], first,
-            jnp.asarray([j["slot"] for j in done], jnp.int32),
-            jnp.asarray([r.eos_id for r in reqs], jnp.int32),
-            jnp.asarray([r.max_new_tokens for r in reqs], jnp.int32),
-            temp, top_k, keys)
-        jax.block_until_ready(self.state["tokens"])
-        dt = time.perf_counter() - t0
-        self._host["prefill_s"] += dt
-        self._note_rate("_pred_per_tok", dt / max(int(sum(lens)), 1))
         self._host["prefill_calls"] += 1
         self._host["prefill_tokens"] += len(done)
         self.scheduler.on_admitted(reqs)
+        for r in reqs:
+            tm = getattr(r, "_timing", None)
+            if tm is not None:
+                self.metrics.observe_ttft(tm.ttft)
+            self.trace.event("first_token", uid=r.uid)
         for j in done:
             self._tail_jobs.remove(j)
             self._slot_req[j["slot"]] = j["req"]
@@ -1380,8 +1439,9 @@ class ServeEngine:
         dst = np.full((n_pad,), self.num_blocks, np.int32)
         src[:len(pairs)] = [p[0] for p in pairs]
         dst[:len(pairs)] = [p[1] for p in pairs]
-        self.state["cache"] = self._cow_jit(
-            self.state["cache"], jnp.asarray(src), jnp.asarray(dst))
+        with self.trace.span("cow", blocks=len(pairs)):
+            self.state["cache"] = self._cow_jit(
+                self.state["cache"], jnp.asarray(src), jnp.asarray(dst))
         self._host["cow_copies"] += len(pairs)
         self._tbl_dirty = True
 
@@ -1511,51 +1571,59 @@ class ServeEngine:
         queue for later restore. Works for decode residents and for the
         in-progress chunk job (which resumes from its last finished
         window)."""
-        t0 = time.perf_counter()
-        job = next((j for j in self._tail_jobs if j["slot"] == slot), None)
-        w = job["c0"] if job is not None else self._written[slot]
-        # only blocks holding written tokens travel; lazily grown tail
-        # blocks past ``w`` hold nothing and are re-allocated on restore
-        ids = self.alloc.owned(slot)[:self.alloc.blocks_for_tokens(w)]
-        payload = self._gather_blocks(ids)
-        nbytes = sum(a.nbytes for layer in payload for a in layer.values())
-        if job is not None:
-            # the affinity key rides along so a restored tail job keeps
-            # its chain "hot" for queued sharers
-            rec = {"req": job["req"], "kind": "prefill", "w": w,
-                   "akey": job.get("akey")}
-            self._tail_jobs.remove(job)
-        else:
-            req = self._slot_req.pop(slot)
-            self._written.pop(slot)
-            # the live sampling key travels with the record so restore
-            # resumes the slot's PRNG state verbatim. Today the key is
-            # constant per slot (steps derive their keys by folding n_gen
-            # into it), so rebuilding from fold_in(PRNGKey(seed), uid)
-            # happened to match — carrying it makes the invariant
-            # explicit instead of leaning on that coincidence, and any
-            # future key-advancing sampler keeps resume bit-exact.
-            n_gen, out_row, last, key = jax.device_get(
-                (self.state["n_gen"][slot], self.state["out"][slot],
-                 self.state["tokens"][slot, 0], self.state["keys"][slot]))
-            rec = {"req": req, "kind": "decode", "w": w,
-                   "n_gen": int(n_gen), "out": np.asarray(out_row),
-                   "last": int(last), "key": np.asarray(key)}
-            self.state["active"] = self.state["active"].at[slot].set(False)
-            # tokens decoded before preemption stream out now (the out
-            # row is already on the host); the stream resumes at the
-            # next harvest after restore — same tokens, same order
-            self._emit_stream(req, rec["out"][req._streamed:rec["n_gen"]],
-                              done=False)
-        rec["payload"] = payload
-        rec["bytes"] = nbytes
-        self.alloc.release(slot)
-        self._admit_seq.pop(slot, None)
-        self._tbl_dirty = True
-        self._swapped.append(rec)
-        self._host["preemptions"] += 1
-        self._host["swap_out_bytes"] += nbytes
-        self._host["swap_s"] += time.perf_counter() - t0
+        with self.trace.span("swap_out", slot=slot) as sp:
+            job = next((j for j in self._tail_jobs if j["slot"] == slot),
+                       None)
+            w = job["c0"] if job is not None else self._written[slot]
+            # only blocks holding written tokens travel; lazily grown tail
+            # blocks past ``w`` hold nothing and are re-allocated on restore
+            ids = self.alloc.owned(slot)[:self.alloc.blocks_for_tokens(w)]
+            payload = self._gather_blocks(ids)
+            nbytes = sum(a.nbytes for layer in payload
+                         for a in layer.values())
+            if job is not None:
+                # the affinity key rides along so a restored tail job keeps
+                # its chain "hot" for queued sharers
+                rec = {"req": job["req"], "kind": "prefill", "w": w,
+                       "akey": job.get("akey")}
+                self._tail_jobs.remove(job)
+            else:
+                req = self._slot_req.pop(slot)
+                self._written.pop(slot)
+                # the live sampling key travels with the record so restore
+                # resumes the slot's PRNG state verbatim. Today the key is
+                # constant per slot (steps derive their keys by folding
+                # n_gen into it), so rebuilding from
+                # fold_in(PRNGKey(seed), uid) happened to match — carrying
+                # it makes the invariant explicit instead of leaning on
+                # that coincidence, and any future key-advancing sampler
+                # keeps resume bit-exact.
+                n_gen, out_row, last, key = jax.device_get(
+                    (self.state["n_gen"][slot], self.state["out"][slot],
+                     self.state["tokens"][slot, 0],
+                     self.state["keys"][slot]))
+                rec = {"req": req, "kind": "decode", "w": w,
+                       "n_gen": int(n_gen), "out": np.asarray(out_row),
+                       "last": int(last), "key": np.asarray(key)}
+                self.state["active"] = \
+                    self.state["active"].at[slot].set(False)
+                # tokens decoded before preemption stream out now (the out
+                # row is already on the host); the stream resumes at the
+                # next harvest after restore — same tokens, same order
+                self._emit_stream(req,
+                                  rec["out"][req._streamed:rec["n_gen"]],
+                                  done=False)
+            rec["payload"] = payload
+            rec["bytes"] = nbytes
+            self.alloc.release(slot)
+            self._admit_seq.pop(slot, None)
+            self._tbl_dirty = True
+            self._swapped.append(rec)
+            self._host["preemptions"] += 1
+            self._host["swap_out_bytes"] += nbytes
+        self._host["swap_s"] += sp.dt
+        self.trace.event("preempted", uid=rec["req"].uid,
+                         kind=rec["kind"], bytes=nbytes)
 
     def _try_swap_in(self) -> None:
         """Restore swapped-out requests while slots and blocks allow.
@@ -1595,7 +1663,15 @@ class ServeEngine:
         payload, and the slot's sampling/output state rebuilt exactly as
         it was — greedy AND sampled decode resume bit-identically (the
         record carries the slot's PRNG key verbatim; see ``_swap_out``)."""
-        t0 = time.perf_counter()
+        with self.trace.span("swap_in", slot=slot,
+                             kind=rec["kind"]) as sp:
+            self._restore_body(slot, rec)
+        self._host["swap_in_bytes"] += rec["bytes"]
+        self._host["swap_s"] += sp.dt
+        self.trace.event("swap_resumed", uid=rec["req"].uid,
+                         kind=rec["kind"], bytes=rec["bytes"])
+
+    def _restore_body(self, slot: int, rec: Dict) -> None:
         req, w = rec["req"], rec["w"]
         need = len(req.prompt) + req.max_new_tokens - 1
         if self.admission == "reserve":
@@ -1637,8 +1713,6 @@ class ServeEngine:
                     [np.asarray(req.prompt, np.int32),
                      np.asarray(rec["out"][:rec["n_gen"] - 1], np.int32)])
                 self._draft_prefill_rows([(slot, consumed)])
-        self._host["swap_in_bytes"] += rec["bytes"]
-        self._host["swap_s"] += time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     # Speculative decoding: host driver
@@ -1686,27 +1760,31 @@ class ServeEngine:
         C = self.spec.k + 1
         tail = np.zeros((self.slots,), np.int32)
         hb_need = 1
-        for s in list(self._slot_req):
-            if s not in self._slot_req:
-                continue            # preempted by an earlier iteration
-            r = self._slot_req[s]
-            w = self._written[s]
-            # the window is clamped to the row's remaining max_new
-            # budget, so peak occupancy never exceeds the admission-time
-            # worst case (prompt + max_new - 1) — no spec headroom
-            t = min(C, len(r.prompt) + r.max_new_tokens - 1 - w)
-            if not self._ensure(s, w + t):
-                continue            # s itself was swapped out
-            if s not in self._slot_req or not self._cow_guard(s, w, w + t):
-                continue
-            tail[s] = t
-            hb_need = max(hb_need, self.alloc.blocks_for_tokens(w + t))
-        for s in range(self.slots):
-            # a slot whose capacity was secured and then swapped out by a
-            # LATER iteration's preemption must ride the wave fully
-            # masked (its table row is already parked on the sentinel)
-            if tail[s] and s not in self._slot_req:
-                tail[s] = 0
+        with self.trace.span("schedule", kind="spec"):
+            for s in list(self._slot_req):
+                if s not in self._slot_req:
+                    continue        # preempted by an earlier iteration
+                r = self._slot_req[s]
+                w = self._written[s]
+                # the window is clamped to the row's remaining max_new
+                # budget, so peak occupancy never exceeds the
+                # admission-time worst case (prompt + max_new - 1) — no
+                # spec headroom
+                t = min(C, len(r.prompt) + r.max_new_tokens - 1 - w)
+                if not self._ensure(s, w + t):
+                    continue        # s itself was swapped out
+                if s not in self._slot_req \
+                        or not self._cow_guard(s, w, w + t):
+                    continue
+                tail[s] = t
+                hb_need = max(hb_need, self.alloc.blocks_for_tokens(w + t))
+            for s in range(self.slots):
+                # a slot whose capacity was secured and then swapped out
+                # by a LATER iteration's preemption must ride the wave
+                # fully masked (its table row is already parked on the
+                # sentinel)
+                if tail[s] and s not in self._slot_req:
+                    tail[s] = 0
         if not self._slot_req:
             return
         if not tail.any():
@@ -1721,17 +1799,20 @@ class ServeEngine:
         n_gen_before = {s: self._written[s] - len(r.prompt) + 1
                         for s, r in self._slot_req.items()}
         st = self.state
-        dtoks, dq, self._draft_cache = self._draft_jit(
-            self.draft_params, self._draft_cache, st["tokens"], st["temp"],
-            st["top_k"], st["keys"], st["n_gen"], st["cache"]["position"],
-            greedy_only)
-        hb = min(_pow2_ceil(hb_need), self.table_len)
-        self.state = self._spec_jit(self.params, self.state, dtoks, dq,
-                                    jnp.asarray(tail), hb, greedy_only)
-        # ONE host sync per wave (like a decode chunk): the harvest's
-        # (active, n_gen) fetch also yields each row's committed count
-        act, n_gen = jax.device_get((self.state["active"],
-                                     self.state["n_gen"]))
+        with self.trace.span("spec_draft", rows=len(self._slot_req)):
+            dtoks, dq, self._draft_cache = self._draft_jit(
+                self.draft_params, self._draft_cache, st["tokens"],
+                st["temp"], st["top_k"], st["keys"], st["n_gen"],
+                st["cache"]["position"], greedy_only)
+        with self.trace.span("spec_verify"):
+            hb = min(_pow2_ceil(hb_need), self.table_len)
+            self.state = self._spec_jit(self.params, self.state, dtoks, dq,
+                                        jnp.asarray(tail), hb, greedy_only)
+            # ONE host sync per wave (like a decode chunk): the harvest's
+            # (active, n_gen) fetch also yields each row's committed count
+            with self.trace.span("sync"):
+                act, n_gen = jax.device_get((self.state["active"],
+                                             self.state["n_gen"]))
         drafted = accepted = 0
         for s, n0 in n_gen_before.items():
             m_s = int(n_gen[s]) - n0
@@ -1762,9 +1843,14 @@ class ServeEngine:
         them for its acceptance accounting) to keep one sync per step."""
         if not self._slot_req:
             return
+        with self.trace.span("harvest"):
+            self._harvest_body(act, n_gen)
+
+    def _harvest_body(self, act, n_gen) -> None:
         if act is None:
-            act, n_gen = jax.device_get((self.state["active"],
-                                         self.state["n_gen"]))
+            with self.trace.span("sync"):
+                act, n_gen = jax.device_get((self.state["active"],
+                                             self.state["n_gen"]))
         if self._paged:
             # exact per-slot progress from the device counter: each decode
             # step writes the KV of the token it consumes, so a slot holds
@@ -1788,7 +1874,9 @@ class ServeEngine:
         fetch = finished + streaming
         if not fetch:
             return
-        all_rows = jax.device_get(self.state["out"][np.asarray(fetch)])
+        with self.trace.span("sync", rows=len(fetch)):
+            all_rows = jax.device_get(
+                self.state["out"][np.asarray(fetch)])
         rows = all_rows[:len(finished)]
         for i, s in enumerate(streaming):
             r = self._slot_req[s]
@@ -1801,6 +1889,12 @@ class ServeEngine:
             req.done = True
             self._emit_stream(req, req.generated[req._streamed:], done=True)
             self.scheduler.on_finished(req)
+            tm = getattr(req, "_timing", None)
+            if tm is not None and tm.admit_t is not None \
+                    and tm.finish_t is not None:
+                self.metrics.observe_finished(
+                    tm.latency, tm.finish_t - tm.admit_t,
+                    len(req.generated))
             if self._paged:
                 if self.prefix_cache and req.generated:
                     # content-address the decoded stream too (the last
@@ -1828,25 +1922,32 @@ class ServeEngine:
         tail/chunked admissions + one decode round (a speculative
         draft+verify wave when spec is enabled, else one on-device decode
         chunk) + harvest."""
-        self._admit()
-        if self._tail_jobs:
-            self._advance_tail_jobs()
-        if self._slot_req:
-            t0 = time.perf_counter()
-            if self.spec is not None:
-                self._spec_step()         # drafts + verify + harvest+trim
-            else:
-                greedy_only = all(r.temperature <= 0.0
-                                  for r in self._slot_req.values())
-                if self._paged:
-                    self._ensure_decode_blocks()
-                self.state = self._decode_jit(self.params, self.state,
-                                              greedy_only)
-                self._harvest()           # device_get doubles as the sync
-            dt = time.perf_counter() - t0
-            self._host["decode_s"] += dt
-            self._host["decode_rounds"] += 1
-            self._note_rate("_pred_round_s", dt)
+        self._step_idx += 1
+        self.trace.step = self._step_idx
+        with self.trace.span("step"):
+            with self.trace.span("admit"):
+                self._admit()
+            if self._tail_jobs:
+                self._advance_tail_jobs()
+            if self._slot_req:
+                with self.trace.span("decode") as sp:
+                    if self.spec is not None:
+                        self._spec_step()  # drafts + verify + harvest+trim
+                    else:
+                        greedy_only = all(r.temperature <= 0.0
+                                          for r in self._slot_req.values())
+                        if self._paged:
+                            with self.trace.span("schedule", kind="decode"):
+                                self._ensure_decode_blocks()
+                        with self.trace.span("decode_chunk",
+                                             rows=len(self._slot_req)):
+                            self.state = self._decode_jit(
+                                self.params, self.state, greedy_only)
+                        # the harvest's device_get doubles as the sync
+                        self._harvest()
+                self._host["decode_s"] += sp.dt
+                self._host["decode_rounds"] += 1
+                self._note_rate("_pred_round_s", sp.dt)
 
     def _flush_partial(self) -> None:
         """Surface still-resident slots' tokens (budget-aborted drain):
@@ -1959,6 +2060,12 @@ class ServeEngine:
         swap_out_bytes/_in_bytes    quantized bytes moved by swaps
         swap_s                      wall seconds in swap gather/restore
         max_residents               peak concurrently resident requests
+        pending_requests            requests waiting in the scheduler queue
+        resident_requests           requests resident in slots (decode +
+                                    in-flight tail prefills)
+        swapped_requests            preempted requests awaiting restore
+        free_blocks                 free cache blocks in the paged pool
+        pool_occupancy              fraction of pool blocks in use
         cache_tokens_capacity       pool/stripe capacity in tokens
         peak_cache_tokens/_bytes    peak occupancy in tokens / bytes
         cache_bytes                 total cache allocation
@@ -1989,6 +2096,10 @@ class ServeEngine:
 
         Paged-only keys appear only with ``kv_layout="paged"``; spec-only
         keys only when ``spec`` is configured.
+
+        Every value is a native Python scalar / container — the dict
+        round-trips through ``json.dumps`` unchanged, which is what the
+        ``/v1/stats`` and ``/v1/metrics`` HTTP surfaces serve.
         """
         steps, committed = jax.device_get((self.state["steps"],
                                            self.state["committed"]))
@@ -2019,11 +2130,18 @@ class ServeEngine:
             d["spec_k"] = self.spec.k
             d["spec_draft_layers"] = self.spec.resolved_layers(self.cfg)
             d["spec_accept_mode"] = self.spec.accept_mode
+        d["pending_requests"] = self.scheduler.pending
+        d["resident_requests"] = (len(self._slot_req)
+                                  + len(self._tail_jobs))
+        d["swapped_requests"] = len(self._swapped)
         if self._paged:
             d["prefix_lookups"] = self.alloc.prefix_lookups
             d["prefix_hit_blocks"] = self.alloc.prefix_hit_blocks
             d["prefix_cache_blocks"] = self.alloc.cached_blocks
             d["prefix_evictions"] = self.alloc.prefix_evictions
+            d["free_blocks"] = self.alloc.free_blocks
+            d["pool_occupancy"] = (1.0 - self.alloc.free_blocks
+                                   / max(self.num_blocks, 1))
             cap_tokens = self.num_blocks * self.block_size
             d["cache_tokens_capacity"] = cap_tokens
             d["peak_cache_tokens"] = self.alloc.peak_blocks * self.block_size
@@ -2039,7 +2157,7 @@ class ServeEngine:
             self._cache_bytes * d["peak_cache_tokens"] / max(cap_tokens, 1))
         d["compile_variants"] = self.compile_variant_counts()
         d.update(self.scheduler.stats())
-        return d
+        return _jsonable(d)
 
     # ------------------------------------------------------------------
     # Compiled-graph introspection (the `repro.analysis` audit surface)

@@ -316,12 +316,18 @@ class AsyncFrontend:
         return handle.request
 
     async def stats(self) -> dict:
-        """Engine stats snapshot (keys in ``ServeEngine.stats``).
+        """Engine stats snapshot (keys in ``ServeEngine.stats``), plus a
+        ``"metrics"`` digest of the pushed TTFT/TPOT/latency histograms
+        (``ServeMetrics.snapshot``).
 
         Runs on the step worker so the device fetch serializes with any
         step in flight — a step's donated state buffers must never be
         read mid-flight."""
+        def snap():
+            st = self.engine.stats()
+            st["metrics"] = self.engine.metrics.snapshot()
+            return st
         if self._pump_task is None:
-            return self.engine.stats()
+            return snap()
         loop = asyncio.get_running_loop()
-        return await loop.run_in_executor(self._executor, self.engine.stats)
+        return await loop.run_in_executor(self._executor, snap)

@@ -2,7 +2,7 @@
 
 Stdlib-only (``asyncio.start_server`` + a hand-rolled HTTP/1.1 parser —
 no web framework dependency), exposing the :class:`~repro.serve.frontend.
-AsyncFrontend` as three routes:
+AsyncFrontend` as four routes:
 
 * ``POST /v1/completions`` — submit a completion. The request body is
   JSON; ``prompt`` is a **list of int token ids** (this repo serves
@@ -12,7 +12,11 @@ AsyncFrontend` as three routes:
   carrying ``finish_reason``, then ``data: [DONE]``. Without ``stream``
   the response is a single OpenAI-shaped JSON completion.
 * ``GET /v1/stats`` — engine stats snapshot (the
-  ``ServeEngine.stats`` key table), JSON.
+  ``ServeEngine.stats`` key table) plus a ``metrics`` histogram digest,
+  JSON.
+* ``GET /v1/metrics`` — the same counters in Prometheus text exposition
+  format plus TTFT/TPOT/latency histograms (``repro.obs.metrics``),
+  ready for a Prometheus scrape job.
 * ``GET /health`` — liveness probe, ``{"status": "ok"}``.
 
 ``finish_reason`` is ``"length"`` (hit ``max_tokens``), ``"stop"``
@@ -29,6 +33,7 @@ import asyncio
 import json
 from typing import Dict, Optional, Tuple
 
+from repro.obs.metrics import CONTENT_TYPE as METRICS_CONTENT_TYPE
 from repro.serve.frontend import AsyncFrontend, RequestStream
 
 MAX_BODY_BYTES = 8 << 20        # refuse absurd request bodies (8 MiB)
@@ -227,6 +232,12 @@ class ServeHTTP:
         elif path == "/v1/stats" and method == "GET":
             stats = await self.frontend.stats()
             await self._respond_json(writer, 200, stats)
+        elif path == "/v1/metrics" and method == "GET":
+            # the counters/gauges are a scrape-time projection of the
+            # same stats() snapshot /v1/stats serves (see obs.metrics)
+            stats = await self.frontend.stats()
+            text = self.frontend.engine.metrics.render(stats)
+            await self._respond_text(writer, 200, text, METRICS_CONTENT_TYPE)
         elif path == "/v1/completions" and method == "POST":
             prompt, kwargs, stream = _parse_completion_body(body)
             if stream:
@@ -274,12 +285,18 @@ class ServeHTTP:
 
     @staticmethod
     async def _respond_json(writer, status: int, obj: Dict) -> None:
-        payload = json.dumps(obj).encode()
+        await ServeHTTP._respond_text(writer, status, json.dumps(obj),
+                                      "application/json")
+
+    @staticmethod
+    async def _respond_text(writer, status: int, text: str,
+                            content_type: str) -> None:
+        payload = text.encode()
         reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
                   413: "Payload Too Large",
                   503: "Service Unavailable"}.get(status, "Error")
         writer.write(f"HTTP/1.1 {status} {reason}\r\n"
-                     f"Content-Type: application/json\r\n"
+                     f"Content-Type: {content_type}\r\n"
                      f"Content-Length: {len(payload)}\r\n"
                      f"Connection: close\r\n\r\n".encode() + payload)
         await writer.drain()

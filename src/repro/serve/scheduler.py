@@ -31,6 +31,8 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from repro.obs.trace import NULL_TRACER
+
 POLICIES = ("fcfs", "sjf", "edf")
 SHED_MODES = ("none", "reject", "downgrade")
 # priority class a downgraded request lands in: behind every explicit
@@ -76,10 +78,13 @@ def percentile(xs: List[float], q: float) -> float:
 class Scheduler:
     """Queue + admission policy + per-request latency bookkeeping."""
 
-    def __init__(self, policy: str = "fcfs"):
+    def __init__(self, policy: str = "fcfs", trace=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
         self.policy = policy
+        # request-lifecycle event sink (a repro.obs Tracer; the engine
+        # passes its own so queue events land in the same trace as waves)
+        self.trace = trace if trace is not None else NULL_TRACER
         self._queue: List = []                   # waiting Requests
         # timing rides on the request object (uids may collide); the
         # scheduler keeps the full list for aggregate stats
@@ -108,6 +113,10 @@ class Scheduler:
         req._deadline_t = None if dl is None else t + dl / 1e3
         self._timings.append(req._timing)
         self._queue.append(req)
+        uid = getattr(req, "uid", None)
+        self.trace.event("submit", uid=uid,
+                         prompt_tokens=len(getattr(req, "prompt", ())))
+        self.trace.event("queued", uid=uid, queue_len=len(self._queue))
 
     @property
     def pending(self) -> int:
@@ -283,6 +292,7 @@ class Scheduler:
                 r.deadline_ms = None
                 r.priority = BEST_EFFORT_PRIORITY
                 self.shed_downgraded += 1
+                self.trace.event("downgraded", uid=getattr(r, "uid", None))
             ahead = work
         for r in shed:
             self._queue.remove(r)
@@ -318,9 +328,17 @@ class Scheduler:
         t = time.perf_counter() if now is None else now
         for r in reqs:
             r._timing.admit_t = t
+            self.trace.event("admitted", uid=getattr(r, "uid", None),
+                             queue_delay_s=t - r._timing.submit_t)
 
     def on_finished(self, req, now: Optional[float] = None) -> None:
-        req._timing.finish_t = time.perf_counter() if now is None else now
+        t = time.perf_counter() if now is None else now
+        req._timing.finish_t = t
+        # latency_s here is the scheduler-clock measurement the trace
+        # report reconciles its own event-delta latency against
+        self.trace.event("finished", uid=getattr(req, "uid", None),
+                         latency_s=req._timing.latency,
+                         tokens=len(getattr(req, "generated", ()) or ()))
 
     def stats(self) -> Dict[str, float]:
         """Aggregate latency/SLO stats over every request ever submitted

@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Summarise a serve trace exported by ``launch/serve.py --trace``.
+
+Reads the Chrome/Perfetto ``trace_event`` JSON the serve launcher (or
+``repro.obs.export.write_trace``) wrote and prints the three views the
+observability layer exists for:
+
+* step-time breakdown by wave family (where each engine step's
+  wall-clock went: admit vs tail vs decode vs swap vs host scheduling),
+* per-request latency attribution percentiles (queue delay / TTFT /
+  decode / TPOT), with the trace-vs-scheduler-clock reconciliation,
+* compile-vs-execute split per wave family, naming each recompile's
+  argument signature from the compile-variant registry.
+
+Usage::
+
+    python tools/trace_report.py trace.json
+    python tools/trace_report.py trace.json --json   # machine-readable
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs.export import (compile_split, load_trace, render_report,
+                              request_attribution, step_breakdown)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Perfetto JSON from --trace")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report sections as one JSON object")
+    args = ap.parse_args(argv)
+
+    trace = load_trace(args.trace)
+    if args.json:
+        print(json.dumps({
+            "step_breakdown": step_breakdown(trace),
+            "request_attribution": request_attribution(trace),
+            "compile_split": compile_split(trace),
+            "otherData": trace.get("otherData", {}),
+        }, indent=2, sort_keys=True))
+    else:
+        print(render_report(trace))
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:             # `trace_report ... | head` is fine
+        import os
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        raise SystemExit(0)
